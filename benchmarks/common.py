@@ -1,0 +1,23 @@
+"""Shared benchmark utilities."""
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup=2, iters=5):
+    """Median wall time per call in microseconds (jit-compiled fn)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,17 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+import sys
+
+
+def main() -> None:
+    from . import fig4_dual_ratio, fig9_patterns, table1_resources, \
+        table2_throughput
+    print("name,us_per_call,derived")
+    for mod in (table1_resources, table2_throughput, fig9_patterns,
+                fig4_dual_ratio):
+        mod.main()
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

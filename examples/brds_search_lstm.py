@@ -1,0 +1,77 @@
+"""Run the paper's Fig.-5 BRDS search on a small LSTM language model:
+ramp to the overall-sparsity target, then walk (Spar_x, Spar_h) both ways,
+retraining at each step, and report the best tuple.
+
+  PYTHONPATH=src python examples/brds_search_lstm.py [--os 0.6]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LSTMModel, LSTMConfig
+from repro.core import brds_search, execution_time_model
+from repro.training import OptConfig, init_state, CharCorpus
+from repro.training.optim import apply_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--os", type=float, default=0.6)
+    ap.add_argument("--retrain-steps", type=int, default=20)
+    args = ap.parse_args()
+
+    ds = CharCorpus()
+    cfg = LSTMConfig("search", input_size=24, hidden=64, num_layers=1,
+                     vocab_size=ds.vocab_size)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    oc = OptConfig(lr=5e-3, warmup_steps=2, total_steps=5000,
+                   schedule="constant")
+    lg = jax.jit(jax.value_and_grad(lambda p, b: model.loss(p, b)))
+
+    def batch(i):
+        b = ds.batch(i, 8, 32)
+        return {"inputs": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    # pretrain
+    st = init_state(oc, params)
+    for i in range(60):
+        _, g = lg(params, batch(i))
+        params, st, _ = apply_update(oc, params, g, st)
+    print("pretrained loss:", float(model.loss(params, batch(9999))))
+
+    ctr = {"i": 100}
+
+    def prune_fn(p, sx, sh):
+        return model.prune(p, sx, sh)
+
+    def retrain_fn(p, masks):
+        s = init_state(oc, p)
+        for _ in range(args.retrain_steps):
+            ctr["i"] += 1
+            _, g = lg(p, batch(ctr["i"]))
+            g = model.mask_grads(g, masks)
+            p, s, _ = apply_update(oc, p, g, s)
+        return p
+
+    def eval_fn(p):
+        return -float(model.loss(p, batch(9999)))
+
+    res = brds_search(params, overall_sparsity=args.os, prune_fn=prune_fn,
+                      retrain_fn=retrain_fn, eval_fn=eval_fn,
+                      alpha=args.os / 2, delta_x=0.1, delta_h=0.1)
+    print(f"\n{'phase':8s} {'Spar_x':>7s} {'Spar_h':>7s} {'loss':>9s}")
+    for h in res.history:
+        print(f"{h['phase']:8s} {h['spar_x']:7.2f} {h['spar_h']:7.2f} "
+              f"{-h['accuracy']:9.4f}")
+    print(f"\nbest: Spar_x={res.best_spar_x:.2f} Spar_h={res.best_spar_h:.2f} "
+          f"loss={-res.best_accuracy:.4f}")
+    t = execution_time_model(args.os, args.os / 2, 0.1, 0.1, ept=1.0,
+                             n_re=args.retrain_steps)
+    print("paper cost model (eq.3-6), retrain-epochs units:", t)
+
+
+if __name__ == "__main__":
+    main()

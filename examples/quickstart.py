@@ -1,0 +1,38 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+Row-balanced dual-ratio pruning of an LSTM, packing to the accelerator
+format, and running the sparse inference path (the Pallas rb_dual_spmv +
+lstm_gates kernels, interpret mode on CPU).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LSTMModel, LSTMConfig
+
+# the paper's TIMIT-shaped layer: X=153 inputs, H=1024 hidden
+cfg = LSTMConfig("demo", input_size=153, hidden=1024, num_classes=61,
+                 framewise=True)
+model = LSTMModel(cfg)
+params = model.init(jax.random.key(0))
+
+# dual-ratio row-balanced pruning (paper's §3.2): the recurrent weights
+# W_h are less sensitive here, so prune W_x harder
+pruned, masks = model.prune(params, spar_x=0.875, spar_h=0.875)
+packed = model.pack(pruned)
+sx, sh = packed[0]["sx"], packed[0]["sh"]
+print(f"W_x: {sx.rows}x{sx.ncols} -> {sx.K} nnz/row "
+      f"({sx.memory_bytes()['ratio']:.1%} of dense)")
+print(f"W_h: {sh.rows}x{sh.ncols} -> {sh.K} nnz/row "
+      f"({sh.memory_bytes()['ratio']:.1%} of dense)")
+print(f"MA sizing rule R_S/R_L = {min(sx.K, sh.K)}/{max(sx.K, sh.K)}")
+
+# run one inference step on both paths — they agree to float tolerance
+x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 153)), jnp.float32)
+state = model.init_state(2)
+h_dense, _ = model.dense_step(pruned, x, state)
+h_sparse, _ = model.sparse_step(packed, x, state)   # Pallas kernels
+print("dense vs packed-sparse max err:",
+      float(jnp.abs(h_dense - h_sparse).max()))

@@ -1,0 +1,7 @@
+"""repro — BRDS row-balanced dual-ratio sparsity as a multi-pod JAX framework.
+
+Paper: Ghasemzadeh et al., "BRDS: An FPGA-based LSTM Accelerator with
+Row-Balanced Dual-Ratio Sparsification" (2021), adapted to TPU v5e.
+See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+"""
+__version__ = "1.0.0"

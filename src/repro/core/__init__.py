@@ -1,0 +1,13 @@
+"""repro.core — the paper's contribution: row-balanced dual-ratio sparsity."""
+from .sparsity import (
+    row_balanced_mask,
+    unstructured_mask,
+    block_mask,
+    bank_balanced_mask,
+    apply_mask,
+    sparsity_of,
+    keep_count,
+)
+from .packing import RowBalancedSparse, pack, unpack, pack_from_dense
+from .brds import brds_search, BRDSResult, execution_time_model
+from . import metrics

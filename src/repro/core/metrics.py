@@ -1,0 +1,48 @@
+"""Accuracy metrics used by the paper's evaluations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["perplexity", "token_accuracy", "binary_accuracy", "cross_entropy"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy. logits (..., V), labels (...) int.
+
+    Sharding-friendly formulation: the label logit is extracted with a
+    one-hot einsum (not take_along_axis — gathers along a model-sharded
+    vocab dim replicate the full logits under SPMD), and logsumexp uses
+    plain reductions which partition into small psums.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+    logz = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    lab1h = jax.lax.stop_gradient(
+        jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32))
+    ll = jnp.einsum("...v,...v->...", logits, lab1h)
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return jnp.mean(nll)
+
+
+def perplexity(mean_nll: float) -> float:
+    """PTB metric: exp of the mean per-token negative log likelihood."""
+    return float(np.exp(mean_nll))
+
+
+def token_accuracy(logits, labels, mask=None) -> float:
+    pred = jnp.argmax(logits, axis=-1)
+    hit = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        return float(jnp.sum(hit * mask) / jnp.maximum(jnp.sum(mask), 1))
+    return float(jnp.mean(hit))
+
+
+def binary_accuracy(logits, labels) -> float:
+    """IMDB-style binary sentiment classification accuracy."""
+    pred = (logits[..., 0] > 0).astype(labels.dtype)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))

@@ -1,0 +1,111 @@
+"""Pruning mask generators — the paper's §3 plus the three baselines it
+compares against (Fig. 2): unstructured (fine-grained global), block sparse,
+bank-balanced (BBS [9]), and the proposed row-balanced pattern.
+
+All functions are pure jnp, jit-compatible, and return boolean masks with
+True = keep. Row-balanced masks keep EXACTLY the same number of elements in
+every row (the paper's invariant that makes the hardware work balanced).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "keep_count",
+    "row_balanced_mask",
+    "unstructured_mask",
+    "block_mask",
+    "bank_balanced_mask",
+    "apply_mask",
+    "sparsity_of",
+]
+
+
+def keep_count(ncols: int, sparsity: float) -> int:
+    """Number of elements kept per row at a given sparsity ratio.
+
+    Matches the paper: prune the smallest ``Spar%`` of each row → keep
+    ``ncols - round(Spar * ncols)``. Always keeps at least 1.
+    """
+    k = ncols - int(round(float(sparsity) * ncols))
+    return max(1, min(ncols, k))
+
+
+def _topk_mask_lastdim(scores: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Boolean mask keeping the k largest entries along the last dim.
+
+    Uses double-argsort ranking so ties are broken deterministically by
+    position and EXACTLY k entries are kept per row.
+    """
+    order = jnp.argsort(-scores, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    return ranks < k
+
+
+def row_balanced_mask(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """The paper's row-balanced pattern (Fig. 2e / Fig. 3 pseudo-code).
+
+    Prunes the smallest ``sparsity`` fraction of |w| along the LAST dim of
+    every row independently → every row keeps exactly
+    ``keep_count(ncols, sparsity)`` non-zeros. Leading dims are batched.
+    """
+    if w.ndim < 2:
+        raise ValueError(f"row_balanced_mask expects ≥2-D weight, got {w.shape}")
+    k = keep_count(w.shape[-1], sparsity)
+    return _topk_mask_lastdim(jnp.abs(w), k)
+
+
+def unstructured_mask(w: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Fine-grained global magnitude pruning (Fig. 2b)."""
+    n = w.size
+    k = max(1, n - int(round(float(sparsity) * n)))
+    flat = jnp.abs(w).reshape(-1)
+    return _topk_mask_lastdim(flat, k).reshape(w.shape)
+
+
+def block_mask(w: jnp.ndarray, sparsity: float, block: tuple[int, int] = (4, 4)) -> jnp.ndarray:
+    """Block sparsity (Fig. 2c): score each b×b block by its mean |w| and
+    prune the lowest-scoring blocks globally. Pads rows/cols to a multiple of
+    the block size (padding never wins the keep contest: -inf score).
+    """
+    br, bc = block
+    r, c = w.shape
+    rp, cp = (-r) % br, (-c) % bc
+    wp = jnp.pad(jnp.abs(w), ((0, rp), (0, cp)))
+    nbr, nbc = (r + rp) // br, (c + cp) // bc
+    blocks = wp.reshape(nbr, br, nbc, bc).transpose(0, 2, 1, 3)
+    score = blocks.mean(axis=(-1, -2))
+    # padding-only blocks get -inf so they are pruned first
+    valid = jnp.ones((r, c), bool)
+    validp = jnp.pad(valid, ((0, rp), (0, cp)))
+    frac_valid = validp.reshape(nbr, br, nbc, bc).transpose(0, 2, 1, 3).mean(axis=(-1, -2))
+    score = jnp.where(frac_valid > 0, score, -jnp.inf)
+    nblocks = nbr * nbc
+    kblocks = max(1, nblocks - int(round(float(sparsity) * nblocks)))
+    bm = _topk_mask_lastdim(score.reshape(-1), kblocks).reshape(nbr, nbc)
+    full = jnp.repeat(jnp.repeat(bm, br, axis=0), bc, axis=1)
+    return full[:r, :c]
+
+
+def bank_balanced_mask(w: jnp.ndarray, sparsity: float, num_banks: int = 4) -> jnp.ndarray:
+    """Bank-balanced sparsity (BBS [9], Fig. 2d): split each row into
+    ``num_banks`` equal banks, fine-grained prune inside each bank.
+    """
+    r, c = w.shape
+    if c % num_banks != 0:
+        raise ValueError(f"ncols {c} not divisible by num_banks {num_banks}")
+    bank = c // num_banks
+    k = keep_count(bank, sparsity)
+    banked = jnp.abs(w).reshape(r, num_banks, bank)
+    m = _topk_mask_lastdim(banked, k)
+    return m.reshape(r, c)
+
+
+def apply_mask(w: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(mask, w, jnp.zeros_like(w))
+
+
+def sparsity_of(mask: jnp.ndarray) -> float:
+    return float(1.0 - np.asarray(jnp.mean(mask.astype(jnp.float32))))

@@ -1,0 +1,13 @@
+"""Target-hardware constants (TPU v5e) used by the roofline analysis.
+
+This container executes on CPU; these numbers describe the TARGET chip that
+the dry-run artifacts are analysed against (per the assignment spec).
+"""
+PEAK_BF16_FLOPS = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~)
+VMEM_BYTES = 128 * 1024 * 1024 # ~128 MiB VMEM per chip (v5e ~128MB)
+MXU_TILE = 128                 # systolic array dimension
+LANE = 128                     # vector lane width
+SUBLANE = 8                    # fp32 sublane count (16 for bf16)
+HBM_PER_CHIP = 16 * 2**30      # 16 GiB

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the BRDS framework.
+
+Each kernel ships with a pure-jnp oracle in ref.py; ops.py holds the jit'd
+public wrappers (interpret=True on CPU, compiled on TPU).
+"""
+from .ops import (
+    rb_spmv,
+    rb_dual_spmv,
+    lstm_gates,
+    flash_attention,
+    decode_attention,
+    on_cpu,
+)
+from . import ref

@@ -1,0 +1,106 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run with interpret=True; on TPU they
+compile. Wrappers handle padding to block multiples and expose a uniform
+`use_kernel` escape hatch that falls back to the pure-jnp reference — the
+dry-run path lowers the reference formulation (XLA fuses it) while tests
+exercise kernel↔ref equivalence.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .rb_spmv import rb_spmv as _rb_spmv_kernel, rb_dual_spmv as _rb_dual_kernel
+from .lstm_gates import lstm_gates as _lstm_gates_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .decode_attention import decode_attention as _decode_kernel
+from ..core.packing import RowBalancedSparse
+
+
+def on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_rows(arr, mult):
+    r = arr.shape[0]
+    pad = (-r) % mult
+    if pad:
+        arr = jnp.pad(arr, ((0, pad),) + ((0, 0),) * (arr.ndim - 1))
+    return arr, pad
+
+
+# ---------------------------------------------------------------- rb_spmv
+
+def rb_spmv(s: RowBalancedSparse, x: jnp.ndarray, *, block_rows: int = 256,
+            use_kernel: bool = True) -> jnp.ndarray:
+    """Packed row-balanced SpMV; x (B, ncols) → (B, rows)."""
+    if not use_kernel:
+        return _ref.rb_spmv_ref(s, x)
+    R = s.rows
+    block_rows = min(block_rows, R)
+    vals, padded = _pad_rows(s.values, block_rows)
+    deltas, _ = _pad_rows(s.deltas, block_rows)
+    y = _rb_spmv_kernel(vals, deltas, x, block_rows=block_rows,
+                        interpret=on_cpu())
+    return y[:, :R] if padded else y
+
+
+def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
+                 *, block_rows: int = 256, use_kernel: bool = True):
+    """z = Sx@x + Sh@h + bias — the fused dual-ratio gate preactivation."""
+    if not use_kernel:
+        return _ref.rb_dual_spmv_ref(sx, x, sh, h, bias)
+    R = sx.rows
+    block_rows = min(block_rows, R)
+    vx, padded = _pad_rows(sx.values, block_rows)
+    dx, _ = _pad_rows(sx.deltas, block_rows)
+    vh, _ = _pad_rows(sh.values, block_rows)
+    dh, _ = _pad_rows(sh.deltas, block_rows)
+    b = jnp.pad(bias, (0, vx.shape[0] - R)) if padded else bias
+    z = _rb_dual_kernel(vx, dx, x, vh, dh, h, b, block_rows=block_rows,
+                        interpret=on_cpu())
+    return z[:, :R] if padded else z
+
+
+# ---------------------------------------------------------------- lstm cell
+
+def lstm_gates(zf, zi, zg, zo, c_prev, *, pwl: bool = False,
+               use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.lstm_cell_ref(zf, zi, zg, zo, c_prev, pwl=pwl)
+    B, H = zf.shape
+    block = H
+    for cand in (512, 256, 128, 64):
+        if H % cand == 0:
+            block = cand
+            break
+    return _lstm_gates_kernel(zf, zi, zg, zo, c_prev, pwl=pwl, block=block,
+                              interpret=on_cpu())
+
+
+# ---------------------------------------------------------------- attention
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
+                    block_q: int = 256, block_kv: int = 256,
+                    use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.mha_ref(q, k, v, causal=causal, window=window)
+    B, Hq, Sq, D = q.shape
+    Sk = k.shape[2]
+    bq = max(g for g in (block_q, 128, 64, 32, 16, 8, 1) if Sq % g == 0)
+    bk = max(g for g in (block_kv, 128, 64, 32, 16, 8, 1) if Sk % g == 0)
+    return _flash_kernel(q, k, v, causal=causal, window=window, block_q=bq,
+                         block_kv=bk, interpret=on_cpu())
+
+
+def decode_attention(q, k, v, lengths, *, block_kv: int = 512,
+                     use_kernel: bool = True):
+    if not use_kernel:
+        return _ref.decode_attention_ref(q, k, v, lengths)
+    S = k.shape[2]
+    bk = max(g for g in (block_kv, 256, 128, 64, 32, 16, 8, 1) if S % g == 0)
+    return _decode_kernel(q, k, v, lengths, block_kv=bk, interpret=on_cpu())

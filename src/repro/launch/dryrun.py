@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, prove sharding coherence + memory fit, and extract
+the roofline terms from the compiled artifacts.
+
+MUST be run as its own process (the two lines above must execute before any
+jax import anywhere): PYTHONPATH=src python -m repro.launch.dryrun [...]
+
+Results are cached as JSON per cell under reports/dryrun/ — rerunning skips
+completed cells (resumable).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, ARCH_NAMES, get_arch, runnable
+from repro.models import build_model
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.training import OptConfig, train_loop
+from repro.training import optim as optim_lib
+from repro import roofline, hw
+from repro.serving.engine import cache_shardings
+from repro.sharding import use_rules, rules_for
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        out = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def _packed_shardings(mesh, packed_abs, orig_sh):
+    """Shardings for a BRDS-packed param tree: original shardings where the
+    leaf survived; packed values/deltas shard their row (output) dim over
+    the model axis when divisible."""
+    import numpy as _np
+    orig = {jax.tree_util.keystr(pp): ss for pp, ss in
+            jax.tree_util.tree_flatten_with_path(orig_sh)[0]}
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+    def build(path, leaf):
+        key = jax.tree_util.keystr(path)
+        if key in orig:
+            return orig[key]
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 2 and leaf.shape[-2] % msize == 0:
+            spec[-2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(build, packed_abs)
+
+
+def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    """Returns (lowered, n_devices, aux_info)."""
+    brds = bool(overrides and overrides.pop("brds", False))
+    arch = get_arch(arch_name)
+    if overrides:
+        arch = arch.with_(**overrides)
+    shape = SHAPES[shape_name]
+    n_total = 512 if multi_pod else 256
+    if arch.layout == "dp" and (
+            shape.kind == "decode"
+            or (shape.kind == "train" and shape.global_batch % n_total)
+            or (shape.kind == "prefill" and not arch.moe)):
+        # decode keeps TP (the model axis carries the split-KV cache);
+        # train keeps DP only when the batch covers every chip; prefill
+        # keeps DP only for MoE (whose TP dispatch collectives dominate) —
+        # dense small archs measured faster under TP at batch 32 (§Perf).
+        arch = arch.with_(layout="tp")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    model = build_model(arch)
+    specs = input_specs(arch, shape)
+    params_abs = model.abstract_params()
+    with use_rules(rules_for(arch)):
+        p_sh = train_loop.param_shardings(mesh, model)
+    brds_report = None
+    if brds:
+        from repro.training.masked import brds_pack_params
+        bc = arch.brds
+        params_abs, brds_report = brds_pack_params(
+            params_abs, bc.spar_a, bc.spar_b, abstract=True)
+        p_sh = _packed_shardings(mesh, params_abs, p_sh)
+    scalar = NamedSharding(mesh, P())
+
+    with mesh, use_rules(rules_for(arch)):
+        if shape.kind == "train":
+            oc = OptConfig()
+            opt_abs = jax.eval_shape(lambda p: optim_lib.init_state(oc, p),
+                                     params_abs)
+            o_sh = train_loop.opt_shardings(mesh, oc, p_sh, params_abs,
+                                            zero1=arch.zero1)
+            b_sh = train_loop.batch_shardings(mesh, specs)
+            step_fn = train_loop.make_train_step(model, arch, oc)
+            m_sh = {"grad_norm": scalar, "lr": scalar, "loss": scalar}
+            fn = jax.jit(step_fn,
+                         in_shardings=(p_sh, o_sh, b_sh, scalar),
+                         out_shardings=(p_sh, o_sh, m_sh),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, specs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            b_sh = train_loop.batch_shardings(mesh, specs)
+            c_sh = cache_shardings(mesh, model, shape.global_batch,
+                                   shape.seq_len)
+            if arch.encdec:
+                fn = jax.jit(
+                    lambda p, t, f: model.prefill(p, t, f, shape.seq_len),
+                    in_shardings=(p_sh, b_sh["tokens"], b_sh["frames"]),
+                    out_shardings=(NamedSharding(mesh, P("data")), c_sh))
+                lowered = fn.lower(params_abs, specs["tokens"],
+                                   specs["frames"])
+            elif arch.num_patches:
+                fn = jax.jit(
+                    lambda p, t, pe: model.prefill(p, t, shape.seq_len,
+                                                   patch_embeds=pe),
+                    in_shardings=(p_sh, b_sh["tokens"],
+                                  b_sh["patch_embeds"]),
+                    out_shardings=(NamedSharding(mesh, P("data")), c_sh))
+                lowered = fn.lower(params_abs, specs["tokens"],
+                                   specs["patch_embeds"])
+            else:
+                fn = jax.jit(
+                    lambda p, t: model.prefill(p, t, shape.seq_len),
+                    in_shardings=(p_sh, b_sh["tokens"]),
+                    out_shardings=(NamedSharding(mesh, P("data")), c_sh))
+                lowered = fn.lower(params_abs, specs["tokens"])
+        else:  # decode
+            from repro.sharding import named_sharding
+            c_sh = cache_shardings(mesh, model, shape.global_batch,
+                                   shape.seq_len)
+            tok_sh = named_sharding(mesh, ("batch", None),
+                                    (shape.global_batch, 1))
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(p_sh, c_sh, tok_sh, scalar),
+                         out_shardings=(tok_sh, c_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_abs, specs["cache"], specs["tokens"],
+                               specs["pos"])
+    return lowered, n_dev, dict(arch=arch, shape=shape, model=model,
+                                brds=brds_report)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False, hlo_dir: str | None = None,
+             overrides: dict | None = None, tag: str = ""):
+    mesh_tag = ("pod2x16x16" if multi_pod else "pod16x16") + tag
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch_name}__{shape_name}__{mesh_tag}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    arch = get_arch(arch_name)
+    shape = SHAPES[shape_name]
+    ok, reason = runnable(arch, shape)
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_tag}
+    if not ok:
+        rec.update(status="n/a", reason=reason)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    t0 = time.time()
+    try:
+        lowered, n_dev, aux = build_cell(arch_name, shape_name, multi_pod,
+                                         overrides)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _mem_analysis(compiled)
+        cost = _cost_analysis(compiled)
+        hlo = compiled.as_text()
+        if hlo_dir:
+            os.makedirs(hlo_dir, exist_ok=True)
+            with open(os.path.join(
+                    hlo_dir, f"{arch_name}__{shape_name}__{mesh_tag}.hlo"),
+                    "w") as f:
+                f.write(hlo)
+        rep = roofline.analyze_hlo(hlo, n_dev, cost)
+        mflops = roofline.model_flops(aux["arch"], aux["shape"])
+        hbm = roofline.analytic_hbm_bytes(aux["arch"], aux["shape"], n_dev)
+        if aux.get("brds"):
+            br = aux["brds"]
+            # packed weights replace the dense weight traffic term
+            delta = (br["dense_bytes"] - br["packed_bytes"]) / n_dev
+            hbm["weights"] = max(hbm["weights"] - delta, 0.0)
+            hbm["total_per_chip"] = max(hbm["total_per_chip"] - delta, 0.0)
+            hbm["brds_packed_ratio"] = br["ratio"]
+            rec["brds"] = br
+        terms = rep.terms(hbm["total_per_chip"], n_dev)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_devices=n_dev,
+            memory_analysis=mem,
+            cost_analysis=cost,
+            hlo_flops_per_chip=rep.flops_hlo,
+            hlo_flops_global=rep.flops_hlo * n_dev,
+            model_flops=mflops,
+            useful_flops_ratio=(mflops["total"] / (rep.flops_hlo * n_dev)
+                                if rep.flops_hlo else None),
+            collectives={k: v for k, v in rep.collectives.items()
+                         if v["count"]},
+            collective_wire_bytes=rep.collective_wire_bytes,
+            hbm_bytes=hbm,
+            roofline=terms,
+        )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all",
+                    help="arch name or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--hlo-dir", default=None,
+                    help="optionally dump compiled HLO text here")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--layout", default=None, choices=[None, "tp", "dp"])
+    ap.add_argument("--brds", action="store_true",
+                    help="lower the BRDS packed-sparse serving variant")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 KV cache variant")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    n_ok = n_na = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                ov = {}
+                if args.layout:
+                    ov["layout"] = args.layout
+                if args.brds:
+                    ov["brds"] = True
+                if args.kv_quant:
+                    ov["kv_quant"] = True
+                ov = ov or None
+                rec = run_cell(arch, shape, mp, args.out, args.force,
+                               args.hlo_dir, overrides=ov, tag=args.tag)
+                tag = "pod2x16x16" if mp else "pod16x16"
+                status = rec.get("status")
+                if status == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(f"[OK ] {arch:26s} {shape:12s} {tag:10s} "
+                          f"compile={rec.get('compile_s', 0):7.1f}s "
+                          f"bound={r['bound']:10s} "
+                          f"step={r['step_s'] * 1e3:9.3f}ms", flush=True)
+                elif status == "n/a":
+                    n_na += 1
+                    print(f"[N/A] {arch:26s} {shape:12s} {tag}: "
+                          f"{rec['reason'][:60]}", flush=True)
+                else:
+                    n_err += 1
+                    print(f"[ERR] {arch:26s} {shape:12s} {tag}: "
+                          f"{rec.get('error', '')[:120]}", flush=True)
+    print(f"done: {n_ok} ok, {n_na} n/a, {n_err} errors", flush=True)
+
+
+if __name__ == "__main__":
+    main()

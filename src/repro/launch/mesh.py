@@ -1,0 +1,23 @@
+"""Production mesh construction. A FUNCTION, not a module constant — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over host CPU devices for tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set before jax init)."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"need {data * model} devices, have {n}")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

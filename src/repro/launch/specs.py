@@ -1,0 +1,59 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input of every
+(arch × shape × phase) cell — weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models import build_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(arch: ArchConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs for the phase implied by shape.kind.
+
+    train:   {tokens, labels, (patch_embeds | frames)}
+    prefill: {tokens, (patch_embeds | frames)}
+    decode:  {tokens (B,1), cache, pos}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    d = arch.d_model
+    jd = arch.jdtype
+    model = build_model(arch)
+
+    if shape.kind == "train":
+        if arch.encdec:
+            half = S // 2
+            return {
+                "tokens": _sds((B, half), jnp.int32),
+                "labels": _sds((B, half), jnp.int32),
+                "frames": _sds((B, half, d), jd),
+            }
+        out = {"tokens": _sds((B, S), jnp.int32),
+               "labels": _sds((B, S), jnp.int32)}
+        if arch.num_patches:
+            out["patch_embeds"] = _sds((B, arch.num_patches, d), jd)
+        return out
+
+    if shape.kind == "prefill":
+        if arch.encdec:
+            return {"tokens": _sds((B, S), jnp.int32),
+                    "frames": _sds((B, arch.enc_len, d), jd)}
+        out = {"tokens": _sds((B, S), jnp.int32)}
+        if arch.num_patches:
+            out["patch_embeds"] = _sds((B, arch.num_patches, d), jd)
+        return out
+
+    if shape.kind == "decode":
+        from ..models import layers as L
+        cache_defs = model.cache_defs(B, S)
+        cache = L.abstract_params(cache_defs)
+        return {"tokens": _sds((B, 1), jnp.int32), "cache": cache,
+                "pos": _sds((), jnp.int32)}
+
+    raise ValueError(shape.kind)

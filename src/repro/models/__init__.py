@@ -1,0 +1,11 @@
+"""Model zoo: the paper's LSTM + the 10 assigned architectures."""
+from .lstm import LSTMModel, LSTMConfig, LSTM_CONFIGS
+from .transformer import TransformerLM
+from .encdec import EncDecLM
+
+
+def build_model(cfg):
+    """ArchConfig → model instance."""
+    if cfg.encdec:
+        return EncDecLM(cfg)
+    return TransformerLM(cfg)

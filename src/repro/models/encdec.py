@@ -1,0 +1,255 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, S_enc, d_model). The transformer backbone
+is real: a bidirectional encoder stack + a causal decoder stack with
+cross-attention, both scanned over layers.
+
+Shape conventions: train_4k splits seq 2048 enc / 2048 dec; decode shapes
+decode the decoder against a fixed-length encoder memory (cfg.enc_len).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import attention as A
+from ..sharding import constrain
+from ..configs.base import ArchConfig
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.vocab_padded = L.pad_vocab(cfg.vocab_size)
+        self.n_enc = cfg.enc_layers or cfg.num_layers
+        self.n_dec = cfg.num_layers
+
+    # ------------------------------------------------------------- defs
+    def _enc_block_defs(self) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        return {
+            "norm1": L.norm_defs(cfg.norm, cfg.d_model),
+            "attn": A.attn_defs(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                cfg.head_dim, cfg.qk_norm, dt),
+            "norm2": L.norm_defs(cfg.norm, cfg.d_model),
+            "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.activation, dt),
+        }
+
+    def _dec_block_defs(self) -> dict:
+        d = self._enc_block_defs()
+        cfg = self.cfg
+        d["norm_x"] = L.norm_defs(cfg.norm, cfg.d_model)
+        d["xattn"] = A.attn_defs(cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.head_dim, cfg.qk_norm, cfg.jdtype)
+        return d
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        return {
+            "frame_proj": {"w": L.PSpec((cfg.d_model, cfg.d_model),
+                                        ("embed", None), dtype=dt)},
+            "embed": L.embed_defs(self.vocab_padded, cfg.d_model, dt),
+            "enc_blocks": L.stack_defs(self._enc_block_defs(), self.n_enc),
+            "enc_norm": L.norm_defs(cfg.norm, cfg.d_model),
+            "dec_blocks": L.stack_defs(self._dec_block_defs(), self.n_dec),
+            "final_norm": L.norm_defs(cfg.norm, cfg.d_model),
+            "head": {"w": L.PSpec((cfg.d_model, self.vocab_padded),
+                                  ("embed", "vocab"), dtype=dt)},
+        }
+
+    def init(self, rng):
+        return L.init_params(self.param_defs(), rng)
+
+    def abstract_params(self):
+        return L.abstract_params(self.param_defs())
+
+    def param_axes(self):
+        return L.param_axes(self.param_defs())
+
+    def param_count(self) -> int:
+        return L.count_params(self.param_defs())
+
+    # ------------------------------------------------------------- encoder
+    def _attend(self, p, x, positions, *, causal, kv=None):
+        cfg = self.cfg
+        q, k, v = A.qkv_project(p, x, positions, qk_norm=cfg.qk_norm,
+                                rope_theta=cfg.rope_theta)
+        if kv is not None:
+            k, v = kv
+        H = cfg.num_heads
+        qp, kp, vp = A.prepare_heads(q, k, v, H)
+        if x.shape[1] <= 4096 and kp.shape[1] <= 4096:
+            o = A.full_attention(qp, kp, vp, causal=causal)
+        else:
+            o = A.blocked_attention(qp, kp, vp, causal=causal,
+                                    block_q=cfg.block_q, block_kv=cfg.block_kv)
+        return A.out_project(p, o[:, :, :H])
+
+    def _cross_kv(self, p, enc_out, positions):
+        """Precompute cross-attention K/V from encoder output."""
+        cfg = self.cfg
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+        if cfg.qk_norm:
+            from .layers import rmsnorm
+            k = rmsnorm(k, p["k_norm"])
+        return k, v
+
+    def encode(self, params, frames):
+        """frames (B, S_enc, d) precomputed embeddings → encoder memory."""
+        cfg = self.cfg
+        x = jnp.einsum("bsd,de->bse", frames.astype(cfg.jdtype),
+                       params["frame_proj"]["w"])
+        x = constrain(x, "batch", "seq", "embed")
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(xc, pblk):
+            h = L.apply_norm(cfg.norm, pblk["norm1"], xc)
+            xc = xc + self._attend(pblk["attn"], h, positions, causal=False)
+            h = L.apply_norm(cfg.norm, pblk["norm2"], xc)
+            xc = xc + L.mlp_apply(pblk["mlp"], h, cfg.activation)
+            return constrain(xc, "batch", "seq", "embed"), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.apply_norm(cfg.norm, params["enc_norm"], x)
+
+    # ------------------------------------------------------------- decoder
+    def _dec_blocks(self, params, x, positions, enc_out, mode, cache, pos):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            xc = carry
+            if cache is None:
+                pblk = xs
+                cblk = None
+            else:
+                pblk, cblk = xs
+            h = L.apply_norm(cfg.norm, pblk["norm1"], xc)
+            new_cblk = None
+            if mode == "decode":
+                q, k, v = A.qkv_project(pblk["attn"], h, positions,
+                                        qk_norm=cfg.qk_norm,
+                                        rope_theta=cfg.rope_theta)
+                kv = A.kv_cache_update(cblk["self"], k, v, pos)
+                dqs = A.dequantize_cache(kv, cfg.jdtype)
+                kx, vx, _ = A.expand_cache_heads(dqs["k"], dqs["v"],
+                                                 cfg.num_heads, cfg.num_heads)
+                qp, Hq = A.pad_q_heads(q)
+                o = A.decode_attention_einsum(qp, kx, vx, pos + 1)[:, :, :Hq]
+                xc = xc + A.out_project(pblk["attn"], o)
+                h = L.apply_norm(cfg.norm, pblk["norm_x"], xc)
+                qx, _, _ = A.qkv_project(pblk["xattn"], h, positions,
+                                         qk_norm=cfg.qk_norm,
+                                         rope_theta=cfg.rope_theta,
+                                         use_rope=False)
+                dqc = A.dequantize_cache(cblk["cross"], cfg.jdtype)
+                ckx, cvx, _ = A.expand_cache_heads(dqc["k"], dqc["v"],
+                                                   cfg.num_heads,
+                                                   cfg.num_heads)
+                qxp, Hq2 = A.pad_q_heads(qx)
+                ox = A.decode_attention_einsum(
+                    qxp, ckx, cvx, cblk["cross"]["k"].shape[1])[:, :, :Hq2]
+                xc = xc + A.out_project(pblk["xattn"], ox)
+                new_cblk = {"self": kv, "cross": cblk["cross"]}
+            else:
+                q, k, v = A.qkv_project(pblk["attn"], h, positions,
+                                        qk_norm=cfg.qk_norm,
+                                        rope_theta=cfg.rope_theta)
+                if mode == "prefill":
+                    kv = A.kv_cache_update(cblk["self"], k, v, 0)
+                qp, kp, vp = A.prepare_heads(q, k, v, cfg.num_heads)
+                o = (A.full_attention(qp, kp, vp, causal=True)
+                     if x.shape[1] <= 4096 else
+                     A.blocked_attention(qp, kp, vp, causal=True,
+                                         block_q=cfg.block_q,
+                                         block_kv=cfg.block_kv))
+                xc = xc + A.out_project(pblk["attn"], o[:, :, :cfg.num_heads])
+                h = L.apply_norm(cfg.norm, pblk["norm_x"], xc)
+                qx, _, _ = A.qkv_project(pblk["xattn"], h, positions,
+                                         qk_norm=cfg.qk_norm,
+                                         rope_theta=cfg.rope_theta,
+                                         use_rope=False)
+                ck, cv = self._cross_kv(pblk["xattn"], enc_out, positions)
+                qxp, ckp, cvp = A.prepare_heads(qx, ck, cv, cfg.num_heads)
+                ox = (A.full_attention(qxp, ckp, cvp, causal=False)
+                      if max(x.shape[1], ckp.shape[1]) <= 4096 else
+                      A.blocked_attention(qxp, ckp, cvp, causal=False,
+                                          block_q=cfg.block_q,
+                                          block_kv=cfg.block_kv))
+                xc = xc + A.out_project(pblk["xattn"],
+                                        ox[:, :, :cfg.num_heads])
+                if mode == "prefill":
+                    new_cblk = {"self": kv, "cross": {"k": ck, "v": cv}}
+            h = L.apply_norm(cfg.norm, pblk["norm2"], xc)
+            xc = xc + L.mlp_apply(pblk["mlp"], h, cfg.activation)
+            xc = constrain(xc, "batch", "seq", "embed")
+            return xc, new_cblk
+
+        fn = body
+        if cfg.remat and mode == "train":
+            fn = jax.checkpoint(body, prevent_cse=False)
+        xs = params["dec_blocks"] if cache is None else (params["dec_blocks"],
+                                                         cache["dec"])
+        x, new_cache = jax.lax.scan(fn, x, xs)
+        return x, new_cache
+
+    # ------------------------------------------------------------- api
+    def forward(self, params, tokens, frames):
+        """Train forward. tokens (B, S_dec); frames (B, S_enc, d)."""
+        enc_out = self.encode(params, frames)
+        x = L.embed_apply(params["embed"], tokens)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, _ = self._dec_blocks(params, x, positions, enc_out, "train",
+                                None, 0)
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        return L.logits_apply(params["head"], x, self.cfg.vocab_size), \
+            jnp.float32(0.0)
+
+    def loss(self, params, batch):
+        logits, _ = self.forward(params, batch["tokens"], batch["frames"])
+        from ..core.metrics import cross_entropy
+        return cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                             batch.get("mask"))
+
+    def cache_defs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        blk = {
+            "self": A.kv_cache_defs(batch, max_len, cfg.num_kv_heads,
+                                    cfg.head_dim, dt, quant=cfg.kv_quant),
+            "cross": A.kv_cache_defs(batch, cfg.enc_len, cfg.num_kv_heads,
+                                     cfg.head_dim, dt, quant=cfg.kv_quant),
+        }
+        return {"dec": L.stack_defs(blk, self.n_dec)}
+
+    def init_cache(self, batch: int, max_len: int):
+        return L.init_params(self.cache_defs(batch, max_len),
+                             jax.random.key(0))
+
+    def prefill(self, params, tokens, frames, max_len: int):
+        enc_out = self.encode(params, frames)
+        cache = self.init_cache(tokens.shape[0], max_len)
+        x = L.embed_apply(params["embed"], tokens)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, new_dec = self._dec_blocks(params, x, positions, enc_out,
+                                      "prefill", cache, 0)
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        logits = L.logits_apply(params["head"], x[:, -1:], self.cfg.vocab_size)
+        return logits, {"dec": new_dec}
+
+    def decode_step(self, params, cache, tokens, pos):
+        x = L.embed_apply(params["embed"], tokens)
+        positions = jnp.full((1, 1), pos, jnp.int32)
+        x, new_dec = self._dec_blocks(params, x, positions, None, "decode",
+                                      cache, pos)
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        logits = L.logits_apply(params["head"], x, self.cfg.vocab_size)
+        return logits, {"dec": new_dec}

@@ -1,0 +1,213 @@
+"""The paper's LSTM (eq. 1–2) with first-class BRDS sparsity.
+
+Gate layout: rows grouped by gate [f; i; g; o], each H rows, so W ∈ R^{4H×X}
+and W_h ∈ R^{4H×H} exactly as in the paper (the paper interleaves the four
+gates' rows in memory; grouping is an equivalent permutation — noted in
+DESIGN.md). Dense masked path for training/retraining; packed row-balanced
+path (rb_dual_spmv + lstm_gates Pallas kernels) for inference — the BRDS
+accelerator datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from ..core import sparsity as S
+from ..core import packing as P
+from ..kernels import ops as K
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMConfig:
+    name: str
+    input_size: int            # X
+    hidden: int                # H
+    num_layers: int = 1
+    vocab_size: int = 0        # >0 → language model (embed + head)
+    num_classes: int = 0       # >0 → sequence classifier (IMDB) / framewise (TIMIT)
+    framewise: bool = False    # per-step classification (TIMIT-style)
+    dtype: Any = jnp.float32
+    pwl_activations: bool = False   # paper's piecewise-linear σ/tanh
+
+
+class LSTMModel:
+    def __init__(self, cfg: LSTMConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        dt = cfg.dtype
+        defs: dict[str, Any] = {"layers": []}
+        for i in range(cfg.num_layers):
+            x_in = cfg.input_size if i == 0 else cfg.hidden
+            defs["layers"].append({
+                "w_x": L.PSpec((4 * cfg.hidden, x_in),
+                               ("lstm_gates", "embed"), dtype=dt),
+                "w_h": L.PSpec((4 * cfg.hidden, cfg.hidden),
+                               ("lstm_gates", "lstm_hidden"), dtype=dt),
+                "b": L.PSpec((4 * cfg.hidden,), ("lstm_gates",),
+                             init="zeros", dtype=dt),
+            })
+        if cfg.vocab_size:
+            defs["embed"] = {"table": L.PSpec((cfg.vocab_size, cfg.input_size),
+                                              ("vocab", "embed"), scale=1.0,
+                                              dtype=dt)}
+            defs["head"] = {"w": L.PSpec((cfg.hidden, cfg.vocab_size),
+                                         ("embed", "vocab"), dtype=dt)}
+        if cfg.num_classes:
+            defs["head"] = {"w": L.PSpec((cfg.hidden, cfg.num_classes),
+                                         ("embed", None), dtype=dt)}
+        return defs
+
+    def init(self, rng):
+        return L.init_params(self.param_defs(), rng)
+
+    def param_axes(self):
+        return L.param_axes(self.param_defs())
+
+    # ------------------------------------------------------------- core
+    @staticmethod
+    def _cell(z, c_prev, *, pwl=False):
+        """z (B, 4H) grouped [f; i; g; o] → (c, h)."""
+        H4 = z.shape[-1]
+        H = H4 // 4
+        zf, zi, zg, zo = (z[..., :H], z[..., H:2 * H], z[..., 2 * H:3 * H],
+                          z[..., 3 * H:])
+        from ..kernels.ref import lstm_cell_ref
+        return lstm_cell_ref(zf, zi, zg, zo, c_prev, pwl=pwl)
+
+    def _scan_layer(self, lp, xs, c0, h0):
+        """xs (B, T, X_in) → hs (B, T, H)."""
+        def step(carry, x_t):
+            c, h = carry
+            z = (x_t @ lp["w_x"].T + h @ lp["w_h"].T +
+                 lp["b"][None, :]).astype(jnp.float32)
+            c, h = self._cell(z, c, pwl=self.cfg.pwl_activations)
+            return (c, h), h
+        (c, h), hs = jax.lax.scan(step, (c0, h0), xs.transpose(1, 0, 2))
+        return hs.transpose(1, 0, 2), (c, h)
+
+    def features(self, params, inputs):
+        """inputs: tokens (B, T) int if LM else features (B, T, X).
+        Returns per-step hidden states of the last layer (B, T, H)."""
+        cfg = self.cfg
+        if cfg.vocab_size:
+            x = L.embed_apply(params["embed"], inputs)
+        else:
+            x = inputs.astype(cfg.dtype)
+        B = x.shape[0]
+        for lp in params["layers"]:
+            c0 = jnp.zeros((B, cfg.hidden), cfg.dtype)
+            h0 = jnp.zeros((B, cfg.hidden), cfg.dtype)
+            x, _ = self._scan_layer(lp, x, c0, h0)
+        return x
+
+    def forward(self, params, inputs):
+        cfg = self.cfg
+        hs = self.features(params, inputs)
+        if cfg.vocab_size:
+            return jnp.einsum("bth,hv->btv", hs,
+                              params["head"]["w"]).astype(jnp.float32)
+        logits = jnp.einsum("bth,hc->btc", hs,
+                            params["head"]["w"]).astype(jnp.float32)
+        return logits if cfg.framewise else logits[:, -1]
+
+    def loss(self, params, batch):
+        from ..core.metrics import cross_entropy
+        cfg = self.cfg
+        logits = self.forward(params, batch["inputs"])
+        if cfg.vocab_size:
+            return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        if cfg.framewise:
+            return cross_entropy(logits, batch["labels"])
+        lab = batch["labels"]
+        onehot = jax.nn.one_hot(lab, logits.shape[-1])
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+    # ------------------------------------------------------------- BRDS
+    def prune(self, params, spar_x: float, spar_h: float):
+        """Row-balanced dual-ratio prune of every layer. Returns
+        (pruned_params, masks) — masks pytree matches params['layers']."""
+        masks = []
+        new_layers = []
+        for lp in params["layers"]:
+            mx = S.row_balanced_mask(lp["w_x"], spar_x)
+            mh = S.row_balanced_mask(lp["w_h"], spar_h)
+            masks.append({"w_x": mx, "w_h": mh})
+            new_layers.append({**lp, "w_x": S.apply_mask(lp["w_x"], mx),
+                               "w_h": S.apply_mask(lp["w_h"], mh)})
+        return {**params, "layers": new_layers}, masks
+
+    def mask_grads(self, grads, masks):
+        """Freeze pruned weights: zero their gradients."""
+        new_layers = []
+        for g, m in zip(grads["layers"], masks):
+            new_layers.append({**g,
+                               "w_x": S.apply_mask(g["w_x"], m["w_x"]),
+                               "w_h": S.apply_mask(g["w_h"], m["w_h"])})
+        return {**grads, "layers": new_layers}
+
+    def pack(self, params):
+        """Pack pruned layers into RowBalancedSparse pairs for serving."""
+        packed = []
+        for lp in params["layers"]:
+            sx = P.pack(lp["w_x"], lp["w_x"] != 0)
+            sh = P.pack(lp["w_h"], lp["w_h"] != 0)
+            packed.append({"sx": sx, "sh": sh, "b": lp["b"]})
+        return packed
+
+    def sparse_step(self, packed, x_t, state, *, use_kernel=True):
+        """One inference time step on the packed BRDS path.
+
+        x_t (B, X); state: list of (c, h) per layer. The dual-ratio fused
+        kernel is the accelerator's Gate module; lstm_gates is Function."""
+        cfg = self.cfg
+        new_state = []
+        inp = x_t
+        for lp, (c, h) in zip(packed, state):
+            z = K.rb_dual_spmv(lp["sx"], inp, lp["sh"], h, lp["b"],
+                               use_kernel=use_kernel)
+            H = cfg.hidden
+            c, h = K.lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
+                                z[:, 3 * H:], c,
+                                pwl=cfg.pwl_activations,
+                                use_kernel=use_kernel)
+            new_state.append((c, h))
+            inp = h
+        return inp, new_state
+
+    def dense_step(self, params, x_t, state):
+        """Dense reference step (same contract as sparse_step)."""
+        new_state = []
+        inp = x_t
+        for lp, (c, h) in zip(params["layers"], state):
+            z = (inp @ lp["w_x"].T + h @ lp["w_h"].T +
+                 lp["b"][None, :]).astype(jnp.float32)
+            c, h = self._cell(z, c, pwl=self.cfg.pwl_activations)
+            new_state.append((c, h))
+            inp = h
+        return inp, new_state
+
+    def init_state(self, batch: int):
+        cfg = self.cfg
+        return [(jnp.zeros((batch, cfg.hidden), cfg.dtype),
+                 jnp.zeros((batch, cfg.hidden), cfg.dtype))
+                for _ in range(cfg.num_layers)]
+
+
+# Paper benchmark configs (§5.1): TIMIT X=153 H=1024; PTB large 1500/1500;
+# IMDB binary classifier.
+LSTM_CONFIGS = {
+    "lstm_timit": LSTMConfig("lstm_timit", input_size=153, hidden=1024,
+                             num_classes=61, framewise=True),
+    "lstm_ptb": LSTMConfig("lstm_ptb", input_size=1500, hidden=1500,
+                           vocab_size=10000),
+    "lstm_imdb": LSTMConfig("lstm_imdb", input_size=128, hidden=512,
+                            vocab_size=0, num_classes=2),
+}

@@ -1,0 +1,137 @@
+"""Mixture-of-Experts: top-k routing with per-sequence capacity dispatch.
+
+GShard-style grouping: tokens are routed *within their own sequence* (group =
+sequence), so the dispatch buffers stay (B, E, C, d) with C = S·k/E·cf and
+shard as batch→data, experts→model. Position-in-expert is computed with a
+cumulative-sum rank (no sort), overflow tokens are dropped (capacity factor
+controls drop rate), and the combine is a slot-aligned weighted sum — no
+scatter-add. XLA SPMD turns the token↔expert resharding into all-to-alls.
+
+The expert FFN weights (E, d, ff) / (E, ff, d) are the BRDS "family A"
+(pruned harder); the router stays dense (tiny, accuracy-critical).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PSpec, _act
+from ..sharding import constrain
+
+
+def moe_defs(d_model: int, d_ff: int, num_experts: int, activation: str,
+             dtype) -> dict:
+    d = {
+        "router": PSpec((d_model, num_experts), ("embed", "experts"),
+                        dtype=jnp.float32),
+    }
+    if activation.endswith("_glu"):
+        d["w_gate"] = PSpec((num_experts, d_model, d_ff),
+                            ("experts", "embed", "mlp"), dtype=dtype)
+    d["w_up"] = PSpec((num_experts, d_model, d_ff),
+                      ("experts", "embed", "mlp"), dtype=dtype)
+    d["w_down"] = PSpec((num_experts, d_ff, d_model),
+                        ("experts", "mlp", "embed"), dtype=dtype)
+    return d
+
+
+def capacity(seq_len: int, top_k: int, num_experts: int, cf: float) -> int:
+    c = int(math.ceil(seq_len * top_k / num_experts * cf))
+    return max(4, c)
+
+
+def _topk_iterative(probs, K: int):
+    """Top-k by K argmax passes. lax.top_k lowers to a TopK custom-call that
+    XLA SPMD cannot partition — it all-gathered the full router probs
+    (134 MB × 48/step on the granite dry-run). argmax/max are plain
+    reductions over the (unsharded) expert dim and partition cleanly."""
+    vals, ids = [], []
+    p = probs
+    for _ in range(K):
+        i = jnp.argmax(p, axis=-1)
+        vals.append(jnp.max(p, axis=-1))
+        ids.append(i)
+        p = p - jax.nn.one_hot(i, p.shape[-1], dtype=p.dtype) * 1e9
+    return jnp.stack(vals, -1), jnp.stack(ids, -1).astype(jnp.int32)
+
+
+def moe_apply(p: dict, x, *, num_experts: int, top_k: int,
+              capacity_factor: float, activation: str,
+              group_size: int = 1024):
+    """x: (B, S, d) → (out (B, S, d), aux_loss scalar).
+
+    Tokens are routed within GROUPS of ≤group_size tokens (GShard): dispatch
+    cost scales with the per-group capacity C = G·k/E·cf, so smaller groups
+    cut the one-hot einsum FLOPs linearly (at slightly higher drop variance).
+    """
+    B0, S0, d = x.shape
+    G = min(group_size, S0)
+    while S0 % G:
+        G -= 1
+    x = x.reshape(B0 * (S0 // G), G, d)
+    # sharding propagation can drop the batch sharding across this reshape
+    # (measured: replicated router probs → 134 MB top_k all-gathers); pin it
+    x = constrain(x, "batch", "seq", "embed")
+    B, S = x.shape[:2]
+    E, K = num_experts, top_k
+    C = capacity(S, K, E, capacity_factor)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, S, E)
+    gate_vals, expert_ids = _topk_iterative(probs, K)          # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style, per sequence)
+    me = jnp.mean(probs, axis=1)                               # (B, E)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=1)                                                # (B, E)
+    aux = jnp.mean(jnp.sum(me * ce, axis=-1)) * E
+
+    # ---- dispatch: rank each (token, slot) within its expert, drop overflow.
+    # GShard-style one-hot EINSUM dispatch: scatter/gather with computed
+    # indices does not partition under SPMD (the partitioner replicates the
+    # full value tensor — measured as a 34 TB all-reduce on the granite
+    # dry-run); einsums partition natively (batch→data, experts→model, the
+    # token↔expert movement becomes all-to-all-shaped collectives). The
+    # dispatch-mask einsums cost ~25-40% of expert FLOPs — the known GShard
+    # overhead; the shard_map all-to-all variant is the §Perf hillclimb.
+    flat_ids = expert_ids.reshape(B, S * K)                    # (B, SK)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)      # (B, SK, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                       # rank within expert
+    pos_in_e = jnp.sum(pos * onehot, axis=-1)                  # (B, SK)
+    safe_pos = jnp.where(pos_in_e < C, pos_in_e, C)            # C → dropped
+    cdt = x.dtype
+    # one-hots are functions of INTEGER indices → no gradient flows through
+    # them; stop_gradient prunes the (large) structurally-zero backward dots
+    D = jax.lax.stop_gradient(
+        jax.nn.one_hot(expert_ids, E, dtype=cdt))              # (B, S, K, E)
+    P = jax.lax.stop_gradient(
+        jax.nn.one_hot(safe_pos.reshape(B, S, K), C, dtype=cdt))
+    DP = jax.lax.stop_gradient(
+        jnp.einsum("bske,bskc->bsec", D, P))                   # dispatch mask
+    buf = jnp.einsum("bsec,bsd->becd", DP, x)                  # (B, E, C, d)
+    buf = constrain(buf, "batch", "experts", "expert_cap", "embed")
+
+    # ---- expert FFN (batched over E; E sharded on model axis)
+    if activation.endswith("_glu"):
+        g = _act(activation, jnp.einsum("becd,edf->becf", buf, p["w_gate"]))
+        u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+        h = g * u
+    else:
+        h = _act(activation, jnp.einsum("becd,edf->becf", buf, p["w_up"]))
+    y = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    y = constrain(y, "batch", "experts", "expert_cap", "embed")
+
+    # ---- combine: gate-weighted one-hot einsum back to token order
+    # (dropped slots hit the zero row of the C-one-hot → contribute 0).
+    # Structured as (D·gate) ⊗ P so the gate gradient contracts c locally
+    # and only psums a (b,s,k) tensor — the fused 3-operand einsum made XLA
+    # all-reduce a (b,s,C,K) fp32 intermediate (2.7 GB/layer) instead.
+    Dg = D * gate_vals.astype(cdt)[..., None]                  # (B, S, K, E)
+    comb = jnp.einsum("bske,bskc->bsec", Dg, P)                # combine mask
+    out = jnp.einsum("becd,bsec->bsd", y, comb)
+    return out.astype(x.dtype).reshape(B0, S0, d), aux

@@ -1,0 +1,320 @@
+"""Decoder-only LM assembly: block patterns, scan-over-periods, caches.
+
+Supports every assigned architecture family:
+- dense GQA transformers (llama3.2, qwen3, minitron, nemotron, llava backbone)
+- MoE transformers (qwen3-moe, granite-moe)
+- hybrid RG-LRU + local-attention (recurrentgemma, pattern ("rec","rec","attn_local"))
+- attention-free RWKV6 (pattern ("rwkv",))
+
+Layers are stacked per pattern-position and scanned over periods (MaxText
+style) so the HLO stays compact at 96 layers; remainder layers (depth not a
+multiple of the pattern period) are applied unscanned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import attention as A
+from . import moe as M
+from . import recurrent as R
+from ..sharding import constrain
+from ..configs.base import ArchConfig
+
+
+class TransformerLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        P = len(cfg.block_pattern)
+        self.n_periods = cfg.num_layers // P
+        self.rem_kinds = tuple(cfg.block_pattern[: cfg.num_layers % P])
+        self.vocab_padded = L.pad_vocab(cfg.vocab_size)
+
+    # ------------------------------------------------------------- defs
+    def _block_defs(self, kind: str) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        d = {"norm1": L.norm_defs(cfg.norm, cfg.d_model)}
+        if kind in ("attn", "attn_local"):
+            h_eff = cfg.pad_heads_to or cfg.num_heads
+            d["attn"] = A.attn_defs(cfg.d_model, h_eff,
+                                    cfg.num_kv_heads, cfg.head_dim,
+                                    cfg.qk_norm, dt)
+        elif kind == "rec":
+            d["rec"] = R.rglru_defs(cfg.d_model, cfg.rnn_width,
+                                    cfg.conv_width, dt)
+        elif kind == "rwkv":
+            d["rwkv"] = R.rwkv_defs(cfg.d_model, cfg.num_heads, cfg.head_dim,
+                                    cfg.d_ff, dt)
+        else:
+            raise ValueError(kind)
+        d["norm2"] = L.norm_defs(cfg.norm, cfg.d_model)
+        if kind != "rwkv":  # rwkv carries its own channel-mix FFN
+            if cfg.moe:
+                d["moe"] = M.moe_defs(cfg.d_model, cfg.d_ff, cfg.num_experts,
+                                      cfg.activation, dt)
+            else:
+                d["mlp"] = L.mlp_defs(cfg.d_model, cfg.d_ff, cfg.activation, dt)
+        return d
+
+    def param_defs(self) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        defs: dict[str, Any] = {
+            "embed": L.embed_defs(self.vocab_padded, cfg.d_model, dt),
+            "final_norm": L.norm_defs(cfg.norm, cfg.d_model),
+            "head": {"w": L.PSpec((cfg.d_model, self.vocab_padded),
+                                  ("embed", "vocab"), dtype=dt)},
+        }
+        if cfg.num_patches:
+            defs["patch_norm"] = L.norm_defs("rmsnorm", cfg.d_model)
+        if self.n_periods:
+            defs["blocks"] = tuple(
+                L.stack_defs(self._block_defs(k), self.n_periods)
+                for k in cfg.block_pattern)
+        for i, k in enumerate(self.rem_kinds):
+            defs[f"rem_{i}"] = self._block_defs(k)
+        return defs
+
+    def init(self, rng):
+        return L.init_params(self.param_defs(), rng)
+
+    def abstract_params(self):
+        return L.abstract_params(self.param_defs())
+
+    def param_axes(self):
+        return L.param_axes(self.param_defs())
+
+    def param_count(self) -> int:
+        return L.count_params(self.param_defs())
+
+    # ------------------------------------------------------------- blocks
+    def _mixer(self, kind, p, x, positions, mode, cache, pos):
+        """Sequence mixer. Returns (y, new_cache)."""
+        cfg = self.cfg
+        if kind in ("attn", "attn_local"):
+            window = cfg.window if kind == "attn_local" else None
+            h_eff = cfg.pad_heads_to or cfg.num_heads
+            q, k, v = A.qkv_project(p["attn"], x, positions,
+                                    qk_norm=cfg.qk_norm,
+                                    rope_theta=cfg.rope_theta)
+            if mode == "decode":
+                new_cache = A.kv_cache_update(cache, k, v, pos)  # true kv
+                dq = A.dequantize_cache(new_cache, cfg.jdtype)
+                kx, vx, _ = A.expand_cache_heads(dq["k"], dq["v"],
+                                                 cfg.num_heads, h_eff)
+                qp, _ = A.pad_q_heads(q)
+                o = A.decode_attention_einsum(qp, kx, vx, pos + 1,
+                                              window=window)[:, :, :h_eff]
+            else:
+                qp, kp, vp = A.prepare_heads(q, k, v, cfg.num_heads)
+                if x.shape[1] <= max(cfg.block_q, 1024):
+                    o = A.full_attention(qp, kp, vp, causal=True,
+                                         window=window)
+                else:
+                    o = A.blocked_attention(qp, kp, vp, causal=True,
+                                            window=window,
+                                            block_q=cfg.block_q,
+                                            block_kv=cfg.block_kv)
+                o = o[:, :, :h_eff]
+                new_cache = None
+                if mode == "prefill":
+                    new_cache = A.kv_cache_update(cache, k, v, 0)
+            if h_eff != cfg.num_heads:
+                # hard-mask dummy TP-padding heads → mathematically inert
+                hm = (jnp.arange(h_eff) < cfg.num_heads).astype(o.dtype)
+                o = o * hm[None, None, :, None]
+            return A.out_project(p["attn"], o), new_cache
+        if kind == "rec":
+            if mode == "decode":
+                return R.rglru_step(p["rec"], x, cache)
+            st = cache if mode == "prefill_chained" else None
+            y, new_state = R.rglru_apply(p["rec"], x, state=st)
+            if mode == "train":
+                new_state = None
+            elif mode == "prefill" and cache is not None:
+                pass
+            return y, new_state
+        if kind == "rwkv":
+            if mode == "decode":
+                return R.rwkv_time_mix_step(p["rwkv"], x, cache)
+            st = cache if cache is not None else {
+                "S": jnp.zeros((x.shape[0], self.cfg.num_heads,
+                                self.cfg.head_dim, self.cfg.head_dim),
+                               jnp.float32),
+                "x_tm": jnp.zeros((x.shape[0], x.shape[2]), x.dtype)}
+            y, new_state = R.rwkv_time_mix(p["rwkv"], x, st,
+                                           chunk=self.cfg.rwkv_chunk)
+            if mode == "train":
+                new_state = None
+            return y, new_state
+        raise ValueError(kind)
+
+    def _block(self, kind, p, x, positions, mode, cache, pos):
+        """Apply one block. Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        h = L.apply_norm(cfg.norm, p["norm1"], x)
+        mix_cache = None if cache is None else cache.get("mix")
+        y, new_mix_cache = self._mixer(kind, p, h, positions, mode,
+                                       mix_cache, pos)
+        x = x + y
+        new_cache = {}
+        if new_mix_cache is not None:
+            new_cache["mix"] = new_mix_cache
+        if kind == "rwkv":
+            h = L.apply_norm(cfg.norm, p["norm2"], x)
+            cm_state = (cache or {}).get("x_cm",
+                                         jnp.zeros((x.shape[0], x.shape[2]),
+                                                   x.dtype))
+            y, new_cm = R.rwkv_channel_mix(p["rwkv"], h, cm_state)
+            x = x + y
+            if cache is not None and mode != "train":
+                new_cache["x_cm"] = new_cm
+        else:
+            h = L.apply_norm(cfg.norm, p["norm2"], x)
+            if cfg.moe:
+                y, aux = M.moe_apply(
+                    p["moe"], h, num_experts=cfg.num_experts,
+                    top_k=cfg.experts_per_token,
+                    capacity_factor=cfg.capacity_factor,
+                    activation=cfg.activation,
+                    group_size=cfg.moe_group)
+            else:
+                y = L.mlp_apply(p["mlp"], h, cfg.activation)
+            x = x + y
+        x = constrain(x, "batch", "seq", "embed")
+        return x, (new_cache if new_cache else None), aux
+
+    # ------------------------------------------------------------- forward
+    def _embed_inputs(self, params, tokens, patch_embeds):
+        x = L.embed_apply(params["embed"], tokens)
+        if self.cfg.num_patches and patch_embeds is not None:
+            pe = L.apply_norm("rmsnorm", params["patch_norm"],
+                              patch_embeds.astype(x.dtype))
+            P = pe.shape[1]
+            x = jnp.concatenate([pe, x[:, P:]], axis=1)
+        return constrain(x, "batch", "seq", "embed")
+
+    def _run_blocks(self, params, x, positions, mode, cache, pos):
+        """Scan over periods + remainder blocks. Returns (x, new_cache, aux)."""
+        cfg = self.cfg
+        pattern = cfg.block_pattern
+        aux_total = jnp.float32(0.0)
+        new_cache = {} if cache is not None or mode == "prefill" else None
+
+        if self.n_periods:
+            blocks_p = params["blocks"]
+            cache_p = None if cache is None else cache["blocks"]
+
+            def period_body(carry, xs):
+                xc, auxc = carry
+                if cache_p is None:
+                    pslices = xs
+                    cslices = (None,) * len(pattern)
+                else:
+                    pslices, cslices = xs
+                outs = []
+                for i, kind in enumerate(pattern):
+                    xc, c_new, a = self._block(kind, pslices[i], xc,
+                                               positions, mode, cslices[i],
+                                               pos)
+                    outs.append(c_new)
+                    auxc = auxc + a
+                ys = tuple(outs) if any(o is not None for o in outs) else None
+                return (xc, auxc), ys
+
+            body = period_body
+            if cfg.remat and mode == "train":
+                body = jax.checkpoint(period_body,
+                                      prevent_cse=False)
+            xs = blocks_p if cache_p is None else (blocks_p, cache_p)
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+            if ys is not None and new_cache is not None:
+                new_cache["blocks"] = ys
+
+        for i, kind in enumerate(self.rem_kinds):
+            c = None if cache is None else cache[f"rem_{i}"]
+            x, c_new, a = self._block(kind, params[f"rem_{i}"], x, positions,
+                                      mode, c, pos)
+            aux_total = aux_total + a
+            if c_new is not None and new_cache is not None:
+                new_cache[f"rem_{i}"] = c_new
+        return x, new_cache, aux_total
+
+    def forward(self, params, tokens, patch_embeds=None):
+        """Training forward: tokens (B, S) → logits (B, S, V) fp32."""
+        x = self._embed_inputs(params, tokens, patch_embeds)
+        positions = jnp.arange(tokens.shape[1])[None, :]
+        x, _, aux = self._run_blocks(params, x, positions, "train", None, 0)
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        logits = L.logits_apply(params["head"], x, self.cfg.vocab_size)
+        return logits, aux
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("patch_embeds"))
+        from ..core.metrics import cross_entropy
+        ce = cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                           batch.get("mask"))
+        return ce + self.cfg.aux_loss_coef * aux
+
+    # ------------------------------------------------------------- serving
+    def _cache_defs_block(self, kind, batch, max_len) -> dict:
+        cfg = self.cfg
+        dt = cfg.jdtype
+        if kind in ("attn", "attn_local"):
+            return {"mix": A.kv_cache_defs(batch, max_len, cfg.num_kv_heads,
+                                           cfg.head_dim, dt,
+                                           quant=cfg.kv_quant)}
+        if kind == "rec":
+            return {"mix": R.rglru_state_defs(batch, cfg.rnn_width,
+                                              cfg.conv_width, dt)}
+        if kind == "rwkv":
+            st = R.rwkv_state_defs(batch, cfg.num_heads, cfg.head_dim,
+                                   cfg.d_model, dt)
+            return {"mix": {"S": st["S"], "x_tm": st["x_tm"]},
+                    "x_cm": st["x_cm"]}
+        raise ValueError(kind)
+
+    def cache_defs(self, batch: int, max_len: int) -> dict:
+        defs: dict[str, Any] = {}
+        if self.n_periods:
+            defs["blocks"] = tuple(
+                L.stack_defs(self._cache_defs_block(k, batch, max_len),
+                             self.n_periods)
+                for k in self.cfg.block_pattern)
+        for i, k in enumerate(self.rem_kinds):
+            defs[f"rem_{i}"] = self._cache_defs_block(k, batch, max_len)
+        return defs
+
+    def init_cache(self, batch: int, max_len: int):
+        return L.init_params(self.cache_defs(batch, max_len), jax.random.key(0))
+
+    def prefill(self, params, tokens, max_len: int, patch_embeds=None):
+        """Process a full prompt, build the cache. Returns (logits_last, cache)."""
+        B, S = tokens.shape
+        cache = self.init_cache(B, max_len)
+        x = self._embed_inputs(params, tokens, patch_embeds)
+        positions = jnp.arange(S)[None, :]
+        x, new_cache, _ = self._run_blocks(params, x, positions, "prefill",
+                                           cache, 0)
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        logits = L.logits_apply(params["head"], x[:, -1:], self.cfg.vocab_size)
+        return logits, new_cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens (B, 1); pos: scalar current position.
+        Returns (logits (B, 1, V), new_cache)."""
+        x = self._embed_inputs(params, tokens, None)
+        positions = jnp.full((1, 1), pos, jnp.int32)
+        x, new_cache, _ = self._run_blocks(params, x, positions, "decode",
+                                           cache, pos)
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        logits = L.logits_apply(params["head"], x, self.cfg.vocab_size)
+        return logits, new_cache

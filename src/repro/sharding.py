@@ -1,0 +1,164 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-aware.
+
+Every parameter / activation dimension carries a *logical* axis name
+('batch', 'embed', 'heads', 'mlp', 'experts', 'vocab', ...). A rule table
+maps logical names to candidate physical mesh axes in priority order; the
+resolver picks, per tensor dimension, the first candidate whose mesh-axis
+product divides the dim size and whose physical axes are not already taken
+by another dimension of the same tensor. Non-divisible dims degrade to
+replication instead of erroring — e.g. kv_heads=8 on a model=16 axis falls
+through to sharding head_dim instead (Megatron-style within-head split).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> candidate physical axes, priority ordered. Each candidate
+# is a tuple of mesh axis names (joint sharding) or None (replicate).
+DEFAULT_RULES: dict[str, list] = {
+    "batch":     [("pod", "data"), ("data",), None],
+    "seq":       [None],
+    # KV caches are sequence-sharded over the model axis (split-KV /
+    # flash-decode): each chip streams 1/model of the cache and decode
+    # attention combines with tiny stat psums.
+    "cache_seq": [("model",), None],
+    "embed":     [None],
+    # head_dim is never sharded: within-head splits force per-layer
+    # activation all-gathers that cost more than the redundant compute they
+    # save (measured on the granite dry-run — see EXPERIMENTS.md §Perf).
+    "heads":     [("model",), None],
+    "kv_heads":  [("model",), None],
+    "head_dim":  [None],
+    "qkv":       [("model",), None],     # flattened q/k/v output dim
+    "mlp":       [("model",), None],
+    "experts":   [("model",), None],
+    "expert_cap": [None],
+    "vocab":     [("model",), None],
+    "layers":    [None],                  # scan-stacked leading dim
+    "lstm_gates": [("model",), None],     # the LSTM 4H gate dim
+    "lstm_hidden": [None],
+    "conv":      [None],
+    "zero":      [("data",), None],       # ZeRO-1 optimizer-state dim
+}
+
+
+def _mesh_axes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+# Per-arch layout policies. "tp16" is the default rule table above;
+# "dp" folds the model axis into data parallelism (small models: TP
+# activation all-reduces cost more than replicating the weights).
+_ACTIVE_RULES: list = []
+
+
+def dp_rules() -> dict:
+    r = dict(DEFAULT_RULES)
+    r["batch"] = [("pod", "data", "model"), ("data", "model"),
+                  ("pod", "data"), ("data",), None]
+    for name in ("heads", "kv_heads", "mlp", "experts", "vocab",
+                 "lstm_gates", "cache_seq"):
+        r[name] = [None]
+    return r
+
+
+def rules_for(cfg) -> dict:
+    """ArchConfig → rule table (cfg.layout: 'tp' default | 'dp')."""
+    if getattr(cfg, "layout", "tp") == "dp":
+        return dp_rules()
+    return DEFAULT_RULES
+
+
+class use_rules:
+    """Context manager: overrides the rule table seen by constrain()
+    during tracing (and by explicit resolve calls that pass rules=None)."""
+
+    def __init__(self, rules: dict | None):
+        self.rules = rules
+
+    def __enter__(self):
+        _ACTIVE_RULES.append(self.rules)
+        return self.rules
+
+    def __exit__(self, *a):
+        _ACTIVE_RULES.pop()
+
+
+def active_rules() -> dict | None:
+    return _ACTIVE_RULES[-1] if _ACTIVE_RULES else None
+
+
+def resolve_spec(mesh: Mesh, logical: Sequence[str | None],
+                 shape: Sequence[int],
+                 rules: dict | None = None,
+                 extra_taken: Sequence[str] = ()) -> P:
+    """Resolve a logical axis tuple to a PartitionSpec for `mesh`."""
+    rules = rules or active_rules() or DEFAULT_RULES
+    sizes = _mesh_axes(mesh)
+    taken: set[str] = set(extra_taken)
+    out = []
+    for name, dim in zip(logical, shape):
+        if name is None:
+            out.append(None)
+            continue
+        cands = rules.get(name, [None])
+        pick = None
+        for cand in cands:
+            if cand is None:
+                break
+            axes = tuple(a for a in cand if a in sizes)
+            if not axes:
+                continue
+            prod = math.prod(sizes[a] for a in axes)
+            if dim % prod == 0 and not (set(axes) & taken):
+                pick = axes
+                taken.update(axes)
+                break
+        out.append(pick if pick is None else (pick if len(pick) > 1 else pick[0]))
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, logical: Sequence[str | None],
+                   shape: Sequence[int], rules: dict | None = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(mesh, logical, shape, rules))
+
+
+def spec_tree(mesh: Mesh, logical_tree, shape_tree, rules: dict | None = None):
+    """Map resolve_spec over matching pytrees of logical tuples and shapes."""
+    return jax.tree.map(
+        lambda lg, sh: named_sharding(mesh, lg, sh, rules),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constrain(x, *logical, rules: dict | None = None):
+    """with_sharding_constraint by logical axes — no-op outside a mesh ctx."""
+    mesh = _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_spec(mesh, logical, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Mesh | None:
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+class Axes(tuple):
+    """A logical-axes annotation: Axes('embed','mlp'). Pytree-leaf tuple."""
+    __slots__ = ()
+
+    def __new__(cls, *names):
+        return super().__new__(cls, names)

@@ -1,0 +1,146 @@
+"""Fault-tolerant checkpointing: atomic commit, keep-k, async save,
+checksum validation, resharding restore.
+
+Layout (single-process container; multi-host writes one file per process):
+
+  <dir>/step_<N>.tmp/        staging (never read)
+  <dir>/step_<N>/            committed atomically by os.rename
+      arrays_p0.npz          flattened-path → array
+      meta.json              {step, checksum, paths, data_state}
+
+Restore picks the newest *committed* step whose checksum validates —
+a half-written checkpoint (node died mid-save) is skipped, which is the
+restart guarantee. `restore(..., mesh, shardings)` re-device_puts onto any
+mesh — this is how elastic rescaling (N→M hosts) reshards state.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _checksum(arrays: dict[str, np.ndarray]) -> str:
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        h.update(k.encode())
+        h.update(np.ascontiguousarray(arrays[k]).tobytes()[:4096])
+        h.update(str(arrays[k].shape).encode())
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None):
+        arrays = _flatten(tree)
+        meta = {"step": int(step), "checksum": _checksum(arrays),
+                "extra": extra or {}}
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, arrays, meta), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, arrays, meta)
+
+    def _write(self, step: int, arrays, meta):
+        tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays_p0.npz"), **arrays)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic commit
+        self._prune()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------- load
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def _valid(self, step: int) -> bool:
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+            with np.load(os.path.join(d, "arrays_p0.npz")) as z:
+                arrays = {k: z[k] for k in z.files}
+            return meta["checksum"] == _checksum(arrays)
+        except Exception:
+            return False
+
+    def latest_step(self) -> int | None:
+        for s in reversed(self.all_steps()):
+            if self._valid(s):
+                return s
+        return None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None) -> tuple[Any, dict]:
+        """Restore into the structure of `template`. If `shardings` (a
+        matching pytree of jax.sharding.Sharding) is given, arrays are
+        device_put onto it — works for ANY mesh shape (elastic restore)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        with np.load(os.path.join(d, "arrays_p0.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            key = jax.tree_util.keystr(path)
+            a = arrays[key]
+            if hasattr(leaf, "dtype"):
+                a = a.astype(leaf.dtype)
+            leaves.append(a)
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree, meta

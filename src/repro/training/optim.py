@@ -1,0 +1,117 @@
+"""Hand-rolled optimizers (no optax in this environment): AdamW, SGD-M, Lion.
+
+Optimizer state is a pytree shaped like params; under ZeRO-1 the state
+arrays are additionally sharded over the data axis — see
+train_loop.opt_shardings. Component updates are computed with separate
+tree.maps (params trees contain tuples as structure, so leaves-as-tuples
+tricks are unsafe); XLA CSE merges the repeated expressions under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"             # adamw | sgdm | lion
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"        # cosine | linear | constant
+
+
+def lr_at(cfg: OptConfig, step):
+    """Warmup + cosine/linear decay. `step` may be traced."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+    elif cfg.schedule == "linear":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * (1 - prog)
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), n
+
+
+def init_state(cfg: OptConfig, params):
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.name == "adamw":
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "count": jnp.zeros((), jnp.int32)}
+    if cfg.name in ("sgdm", "lion"):
+        return {"m": jax.tree.map(f32, params),
+                "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.name)
+
+
+def apply_update(cfg: OptConfig, params, grads, state, step=None):
+    """Returns (new_params, new_state, metrics). grads cast to fp32."""
+    step = state["count"] if step is None else step
+    lr = lr_at(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.betas
+
+    if cfg.name == "adamw":
+        t = jnp.asarray(step + 1, jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        new_m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                             state["m"], grads)
+        new_v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                             state["v"], grads)
+
+        def upd(p, m, v):
+            stepv = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+            pf = p.astype(jnp.float32)
+            return (pf - lr * (stepv + cfg.weight_decay * pf)).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, new_m, new_v)
+        new_state = {"m": new_m, "v": new_v, "count": state["count"] + 1}
+    elif cfg.name == "sgdm":
+        new_m = jax.tree.map(lambda m, g: b1 * m + g, state["m"], grads)
+
+        def upd(p, m):
+            pf = p.astype(jnp.float32)
+            return (pf - lr * (m + cfg.weight_decay * pf)).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, new_m)
+        new_state = {"m": new_m, "count": state["count"] + 1}
+    elif cfg.name == "lion":
+        def upd(p, m, g):
+            u = jnp.sign(b1 * m + (1 - b1) * g)
+            pf = p.astype(jnp.float32)
+            return (pf - lr * (u + cfg.weight_decay * pf)).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, state["m"], grads)
+        new_m = jax.tree.map(lambda m, g: b2 * m + (1 - b2) * g,
+                             state["m"], grads)
+        new_state = {"m": new_m, "count": state["count"] + 1}
+    else:
+        raise ValueError(cfg.name)
+    return new_p, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,106 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret mode on CPU per the assignment)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack_from_dense
+from repro.kernels import (rb_spmv, rb_dual_spmv, lstm_gates, flash_attention,
+                           decode_attention)
+from repro.kernels import ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,cols,spar,B", [
+    (128, 64, 0.5, 1), (256, 96, 0.75, 4), (512, 256, 0.875, 2),
+    (96, 33, 0.3, 3),
+])
+def test_rb_spmv_matches_ref(rng, rows, cols, spar, B, dtype):
+    w = _rand(rng, (rows, cols), jnp.float32)
+    s = pack_from_dense(w, spar)
+    s = type(s)(values=s.values.astype(dtype), deltas=s.deltas, ncols=s.ncols)
+    x = _rand(rng, (B, cols), dtype)
+    got = rb_spmv(s, x, block_rows=64)
+    want = ref.rb_spmv_ref(s, x)
+    tol = 1e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("H,X,sx,sh", [
+    (64, 48, 0.875, 0.5), (128, 200, 0.6, 0.8),
+])
+def test_rb_dual_spmv_matches_ref(rng, H, X, sx, sh):
+    """The fused dual-ratio gate preactivation (paper's Large/Small MAs)."""
+    wx = _rand(rng, (4 * H, X), jnp.float32)
+    wh = _rand(rng, (4 * H, H), jnp.float32)
+    sx_p = pack_from_dense(wx, sx)
+    sh_p = pack_from_dense(wh, sh)
+    x = _rand(rng, (2, X), jnp.float32)
+    h = _rand(rng, (2, H), jnp.float32)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    got = rb_dual_spmv(sx_p, x, sh_p, h, b, block_rows=64)
+    want = ref.rb_dual_spmv_ref(sx_p, x, sh_p, h, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("pwl", [False, True])
+@pytest.mark.parametrize("B,H", [(2, 128), (4, 512), (1, 64)])
+def test_lstm_gates_matches_ref(rng, B, H, pwl):
+    zs = [_rand(rng, (B, H), jnp.float32) * 3 for _ in range(4)]
+    c = _rand(rng, (B, H), jnp.float32)
+    ck, hk = lstm_gates(*zs, c, pwl=pwl)
+    cr, hr = ref.lstm_cell_ref(*zs, c, pwl=pwl)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=1e-5)
+
+
+def test_pwl_approximates_exact(rng):
+    """The paper's 16-segment PWL activations track the exact ones."""
+    x = jnp.linspace(-10, 10, 1001)
+    assert float(jnp.abs(ref.pwl_sigmoid_ref(x)
+                         - jax.nn.sigmoid(x)).max()) < 0.02
+    assert float(jnp.abs(ref.pwl_tanh_ref(x) - jnp.tanh(x)).max()) < 0.1
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,Hq,Hkv,S,D,win", [
+    (1, 4, 4, 128, 64, None),
+    (2, 8, 2, 256, 64, None),
+    (1, 4, 1, 128, 32, 48),
+    (2, 6, 2, 192, 64, None),   # non-pow2 seq
+])
+def test_flash_attention_matches_ref(rng, B, Hq, Hkv, S, D, win, dtype):
+    q = _rand(rng, (B, Hq, S, D), dtype)
+    k = _rand(rng, (B, Hkv, S, D), dtype)
+    v = _rand(rng, (B, Hkv, S, D), dtype)
+    got = flash_attention(q, k, v, causal=True, window=win, block_q=64,
+                          block_kv=64)
+    want = ref.mha_ref(q, k, v, causal=True, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 0.05
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (2, 8, 2, 256, 64), (1, 4, 4, 512, 128), (3, 6, 2, 128, 64),
+])
+def test_decode_attention_matches_ref(rng, B, Hq, Hkv, S, D):
+    q = _rand(rng, (B, Hq, D), jnp.float32)
+    k = _rand(rng, (B, Hkv, S, D), jnp.float32)
+    v = _rand(rng, (B, Hkv, S, D), jnp.float32)
+    lengths = jnp.asarray(np.random.default_rng(0).integers(1, S, B),
+                          jnp.int32)
+    got = decode_attention(q, k, v, lengths, block_kv=64)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)

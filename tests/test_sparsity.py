@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) for the paper's core invariants:
+row-balanced masks, dual-ratio pruning, packed format roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (row_balanced_mask, unstructured_mask, block_mask,
+                        bank_balanced_mask, apply_mask, keep_count,
+                        pack, unpack, pack_from_dense, sparsity_of)
+
+dims = st.integers(min_value=2, max_value=48)
+spars = st.floats(min_value=0.0, max_value=0.95)
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=st.integers(0, 2**31))
+def test_row_balanced_exact_k_per_row(rows, cols, spar, seed):
+    """THE paper invariant: every row keeps exactly K non-zeros."""
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, cols)),
+                    jnp.float32)
+    m = row_balanced_mask(w, spar)
+    k = keep_count(cols, spar)
+    counts = np.asarray(m.sum(axis=1))
+    assert (counts == k).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=st.integers(0, 2**31))
+def test_row_balanced_keeps_largest(rows, cols, spar, seed):
+    """Kept entries in each row are ≥ every pruned entry (by |.|)."""
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, cols)),
+                    jnp.float32)
+    m = np.asarray(row_balanced_mask(w, spar))
+    aw = np.abs(np.asarray(w))
+    for r in range(rows):
+        if m[r].all() or not m[r].any():
+            continue
+        assert aw[r][m[r]].min() >= aw[r][~m[r]].max() - 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=st.integers(0, 2**31))
+def test_pack_unpack_roundtrip(rows, cols, spar, seed):
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(rows, cols)),
+                    jnp.float32)
+    m = row_balanced_mask(w, spar)
+    s = pack(w, m)
+    dense = unpack(s)
+    assert jnp.allclose(dense, apply_mask(w, m))
+    # columns strictly ascending per row
+    cols_idx = np.asarray(s.col_indices())
+    assert (np.diff(cols_idx, axis=1) > 0).all()
+    assert cols_idx.min() >= 0 and cols_idx.max() < cols
+
+
+@settings(max_examples=20, deadline=None)
+@given(cols=st.integers(2, 200), spar=spars)
+def test_keep_count_bounds(cols, spar):
+    k = keep_count(cols, spar)
+    assert 1 <= k <= cols
+
+
+def test_delta_dtype_narrows():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(8, 100)), jnp.float32)
+    s = pack_from_dense(w, 0.5)
+    assert s.deltas.dtype == jnp.int8
+    w2 = jnp.asarray(np.random.default_rng(0).normal(size=(4, 1000)),
+                     jnp.float32)
+    s2 = pack_from_dense(w2, 0.5)
+    assert s2.deltas.dtype == jnp.int16
+
+
+def test_memory_accounting():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(64, 128)),
+                    jnp.float32)
+    s = pack_from_dense(w, 0.75)
+    mem = s.memory_bytes()
+    assert mem["values"] == 64 * 32 * 4
+    assert mem["indices"] == 64 * 32 * 1          # int8 deltas
+    assert mem["ratio"] < 0.32
+
+
+@pytest.mark.parametrize("fn,kw", [
+    (unstructured_mask, {}),
+    (block_mask, {"block": (2, 2)}),
+    (bank_balanced_mask, {"num_banks": 4}),
+])
+def test_baseline_masks_hit_target_sparsity(fn, kw):
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 64)),
+                    jnp.float32)
+    for spar in (0.25, 0.5, 0.75):
+        m = fn(w, spar, **kw)
+        assert abs(sparsity_of(m) - spar) < 0.05
+
+
+def test_bank_balanced_per_bank_counts():
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(8, 64)), jnp.float32)
+    m = np.asarray(bank_balanced_mask(w, 0.5, num_banks=4))
+    banked = m.reshape(8, 4, 16)
+    assert (banked.sum(-1) == 8).all()

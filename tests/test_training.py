@@ -1,0 +1,138 @@
+"""Training substrate: optimizers, schedules, grad accumulation, data
+determinism, gradient compression (error feedback)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.training import OptConfig, init_state
+from repro.training.optim import apply_update, lr_at, global_norm
+from repro.training.data import ZipfInduction, CharCorpus, ShardedLoader
+from repro.training import compression as C
+
+
+def _quad_problem(opt_name):
+    """Minimize ||x - t||^2 with each optimizer; must converge."""
+    oc = OptConfig(name=opt_name, lr=0.05, weight_decay=0.0,
+                   warmup_steps=1, total_steps=500, schedule="constant")
+    t = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros(3)}
+    state = init_state(oc, params)
+    loss = lambda p: jnp.sum((p["x"] - t) ** 2)
+    g = jax.grad(loss)
+    for i in range(300):
+        params, state, _ = apply_update(oc, params, g(params), state)
+    return float(loss(params))
+
+
+@pytest.mark.parametrize("opt", ["adamw", "sgdm", "lion"])
+def test_optimizers_converge(opt):
+    assert _quad_problem(opt) < 1e-2
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                   min_lr_frac=0.1, schedule="cosine")
+    assert float(lr_at(oc, 0)) == 0.0
+    assert float(lr_at(oc, 10)) == pytest.approx(1.0)
+    assert float(lr_at(oc, 100)) == pytest.approx(0.1, abs=1e-3)
+    assert float(lr_at(oc, 55)) > float(lr_at(oc, 90))
+
+
+def test_grad_clip():
+    oc = OptConfig(grad_clip=1.0)
+    params = {"x": jnp.zeros(4)}
+    st = init_state(oc, params)
+    big = {"x": jnp.full(4, 100.0)}
+    _, _, m = apply_update(oc, params, big, st)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_grad_accum_equivalence():
+    """accum=2 over a split batch == accum=1 over the full batch."""
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    from repro.training import make_train_step
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    oc = OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    st = init_state(oc, params)
+    rng = jax.random.key(1)
+    tokens = jax.random.randint(rng, (4, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    p1, _, m1 = jax.jit(make_train_step(model, cfg.with_(grad_accum=1), oc))(
+        params, st, batch, jnp.int32(0))
+    p2, _, m2 = jax.jit(make_train_step(model, cfg.with_(grad_accum=2), oc))(
+        params, st, batch, jnp.int32(0))
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert d < 1e-5
+
+
+def test_data_determinism_and_sharding():
+    """Restart invariant: batch k is a pure function of (seed, step);
+    shards partition the global batch."""
+    ds = ZipfInduction(vocab_size=100, seed=7)
+    b1 = ds.batch(5, 8, 16)
+    b2 = ds.batch(5, 8, 16)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    full = ShardedLoader(ds, 8, 16, shard_idx=0, num_shards=1).batch(3)
+    parts = [ShardedLoader(ds, 8, 16, shard_idx=i, num_shards=4).batch(3)
+             for i in range(4)]
+    np.testing.assert_array_equal(
+        np.concatenate([p["tokens"] for p in parts]), full["tokens"])
+
+
+def test_induction_structure_learnable():
+    """The planted bigram rules are real: rule transitions are frequent."""
+    ds = ZipfInduction(vocab_size=50, rule_frac=1.0, seed=0)
+    b = ds.batch(0, 4, 64)
+    t = b["tokens"]
+    hits = (t[:, 1:] == ds.rules[t[:, :-1]]).mean()
+    assert hits > 0.95
+
+
+def test_char_corpus():
+    ds = CharCorpus()
+    b = ds.batch(0, 4, 32)
+    assert b["tokens"].shape == (4, 32)
+    assert b["tokens"].max() < ds.vocab_size
+
+
+# ------------------------------------------------------------ compression
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31), scale=st.floats(1e-3, 1e3))
+def test_quantize_bounded_error(seed, scale):
+    g = jnp.asarray(np.random.default_rng(seed).normal(size=64) * scale,
+                    jnp.float32)
+    q, s, res = C.quantize(g)
+    err = jnp.abs(C.dequantize(q, s) + res - g)
+    assert float(err.max()) < 1e-5          # q*s + residual == g exactly-ish
+    assert float(jnp.abs(res).max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_preserves_sum():
+    """Across steps, error feedback means quantization error doesn't
+    accumulate: sum of dequantized ≈ sum of true gradients."""
+    rng = np.random.default_rng(0)
+    res = jnp.zeros(32)
+    total_true = jnp.zeros(32)
+    total_sent = jnp.zeros(32)
+    for i in range(50):
+        g = jnp.asarray(rng.normal(size=32), jnp.float32)
+        q, s, res = C.quantize(g, res)
+        total_true += g
+        total_sent += C.dequantize(q, s)
+    # residual bounds the divergence
+    np.testing.assert_allclose(np.asarray(total_sent + res),
+                               np.asarray(total_true), atol=1e-4)
+
+
+def test_wire_bytes_accounting():
+    tree = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros(8, jnp.bfloat16)}
+    assert C.wire_bytes(tree, compressed=False) == 64 + 16
+    assert C.wire_bytes(tree, compressed=True) == 16 + 8
