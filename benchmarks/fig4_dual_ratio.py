@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import LSTMModel, LSTMConfig
+from repro.sparse import lstm_policy, mask_grads
 from repro.training import OptConfig, init_state, CharCorpus
 from repro.training.optim import apply_update
 from repro.core.metrics import perplexity
@@ -22,7 +23,7 @@ def _train(model, params, ds, steps, masks=None, off=0):
         b = {"inputs": jnp.asarray(t), "labels": jnp.asarray(t)}
         _, g = lg(params, b)
         if masks is not None:
-            g = model.mask_grads(g, masks)
+            g = mask_grads(g, masks)
         params, st, _ = apply_update(oc, params, g, st)
     return params
 
@@ -48,7 +49,8 @@ def main():
         sh = (0.6 * (nx + nh) - sx * nx) / nh
         if not (0.0 <= sh <= 0.95):
             continue
-        pruned, masks = model.prune(params, sx, sh)
+        plan = lstm_policy(sx, sh).compile(params)
+        pruned, masks = plan.prune(params)
         retr = _train(model, pruned, ds, 40, masks=masks, off=500)
         loss = float(model.loss(retr, eval_b))
         results[(round(sx, 2), round(sh, 2))] = loss

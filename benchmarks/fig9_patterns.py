@@ -6,17 +6,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import LSTMModel, LSTMConfig
+from repro.sparse import get_format
 from repro.training import OptConfig, init_state, CharCorpus
 from repro.training.optim import apply_update
-from repro.core.sparsity import (row_balanced_mask, unstructured_mask,
-                                 block_mask, bank_balanced_mask, apply_mask)
+from repro.core.sparsity import apply_mask
 from .common import row
 
+# each pattern is a registered SparseFormat (+ its mask options)
 PATTERNS = {
-    "unstructured": (unstructured_mask, {}),
-    "block4x4": (block_mask, {"block": (4, 4)}),
-    "bank_balanced": (bank_balanced_mask, {"num_banks": 4}),
-    "row_balanced": (row_balanced_mask, {}),
+    "unstructured": ("unstructured", {}),
+    "block4x4": ("block", {"block": (4, 4)}),
+    "bank_balanced": ("bank_balanced", {"num_banks": 4}),
+    "row_balanced": ("row_balanced", {}),
 }
 
 
@@ -43,11 +44,12 @@ def main():
 
     for spar in (0.25, 0.5, 0.75, 0.875):
         line = {}
-        for name, (fn, kw) in PATTERNS.items():
+        for name, (fmt_name, kw) in PATTERNS.items():
+            fmt = get_format(fmt_name)
             p2 = {**params, "layers": [
                 {**lp,
-                 "w_x": apply_mask(lp["w_x"], fn(lp["w_x"], spar, **kw)),
-                 "w_h": apply_mask(lp["w_h"], fn(lp["w_h"], spar, **kw))}
+                 "w_x": apply_mask(lp["w_x"], fmt.mask(lp["w_x"], spar, **kw)),
+                 "w_h": apply_mask(lp["w_h"], fmt.mask(lp["w_h"], spar, **kw))}
                 for lp in params["layers"]]}
             line[name] = float(model.loss(p2, eval_b))
         row(f"fig9_sparsity={spar}", 0.0,

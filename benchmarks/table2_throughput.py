@@ -30,7 +30,7 @@ def main():
 
     dense_fn = jax.jit(lambda xx, ss: model.dense_step(pruned, xx, ss))
     sparse_fn = jax.jit(
-        lambda xx, ss: model.sparse_step(packed, xx, ss, use_kernel=False))
+        lambda xx, ss: model.sparse_step(packed, xx, ss, backend="ref"))
     us_dense = time_call(dense_fn, x, st)
     us_sparse = time_call(sparse_fn, x, st)
 

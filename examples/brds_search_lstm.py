@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import LSTMModel, LSTMConfig
-from repro.core import brds_search, execution_time_model
+from repro.sparse import brds_search, execution_time_model, lstm_policy
 from repro.training import OptConfig, init_state, CharCorpus
 from repro.training.optim import apply_update
 
@@ -44,23 +44,23 @@ def main():
 
     ctr = {"i": 100}
 
-    def prune_fn(p, sx, sh):
-        return model.prune(p, sx, sh)
-
-    def retrain_fn(p, masks):
+    # the search walks SparsityPolicy objects: one factory maps each
+    # (Spar_x, Spar_h) tuple to the paper's dual-ratio row-balanced policy
+    def retrain_fn(p, plan, masks):
         s = init_state(oc, p)
         for _ in range(args.retrain_steps):
             ctr["i"] += 1
             _, g = lg(p, batch(ctr["i"]))
-            g = model.mask_grads(g, masks)
+            g = plan.mask_grads(g, masks)
             p, s, _ = apply_update(oc, p, g, s)
         return p
 
     def eval_fn(p):
         return -float(model.loss(p, batch(9999)))
 
-    res = brds_search(params, overall_sparsity=args.os, prune_fn=prune_fn,
-                      retrain_fn=retrain_fn, eval_fn=eval_fn,
+    res = brds_search(params, overall_sparsity=args.os,
+                      policy_at=lstm_policy, retrain_fn=retrain_fn,
+                      eval_fn=eval_fn,
                       alpha=args.os / 2, delta_x=0.1, delta_h=0.1)
     print(f"\n{'phase':8s} {'Spar_x':>7s} {'Spar_h':>7s} {'loss':>9s}")
     for h in res.history:

@@ -1,8 +1,15 @@
-"""Quickstart: the paper's technique in 40 lines.
+"""Quickstart: the paper's technique through the repro.sparse API.
 
-Row-balanced dual-ratio pruning of an LSTM, packing to the accelerator
-format, and running the sparse inference path (the Pallas rb_dual_spmv +
-lstm_gates kernels, interpret mode on CPU).
+The flow is policy → plan → pack:
+
+  1. declare a SparsityPolicy — per-weight-family (format, ratio) rules;
+  2. compile it against the model's params into a SparsityPlan;
+  3. plan.prune zeroes the pruned weights (masks freeze them in retraining);
+  4. plan.pack converts the survivors to the accelerator's packed
+     row-balanced format (values + relative-address deltas);
+  5. the packed tree runs the sparse inference path (the Pallas
+     rb_dual_spmv + lstm_gates kernels — the backend is configured once on
+     the policy: "pallas" | "ref" | "auto").
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LSTMModel, LSTMConfig
+from repro.sparse import SparsityPolicy
 
 # the paper's TIMIT-shaped layer: X=153 inputs, H=1024 hidden
 cfg = LSTMConfig("demo", input_size=153, hidden=1024, num_classes=61,
@@ -18,21 +26,32 @@ cfg = LSTMConfig("demo", input_size=153, hidden=1024, num_classes=61,
 model = LSTMModel(cfg)
 params = model.init(jax.random.key(0))
 
-# dual-ratio row-balanced pruning (paper's §3.2): the recurrent weights
-# W_h are less sensitive here, so prune W_x harder
-pruned, masks = model.prune(params, spar_x=0.875, spar_h=0.875)
-packed = model.pack(pruned)
-sx, sh = packed[0]["sx"], packed[0]["sh"]
+# dual-ratio row-balanced pruning (paper's §3.2): the input weights W_x
+# tolerate harder pruning than the recurrent W_h (the paper's X_SP ≪ H_SP)
+policy = SparsityPolicy.of({r"w_x$": ("row_balanced", 0.875),
+                            r"w_h$": ("row_balanced", 0.75)},
+                           layout="out_in", backend="auto")
+plan = policy.compile(params)
+pruned, masks = plan.prune(params)
+print("plan:", plan, "—", plan.summary(masks))
+
+packed, report = plan.pack(pruned, masks=masks)
+sx, sh = packed["layers"][0]["w_x"], packed["layers"][0]["w_h"]
 print(f"W_x: {sx.rows}x{sx.ncols} -> {sx.K} nnz/row "
       f"({sx.memory_bytes()['ratio']:.1%} of dense)")
 print(f"W_h: {sh.rows}x{sh.ncols} -> {sh.K} nnz/row "
       f"({sh.memory_bytes()['ratio']:.1%} of dense)")
 print(f"MA sizing rule R_S/R_L = {min(sx.K, sh.K)}/{max(sx.K, sh.K)}")
+print(f"whole-tree packed/dense ratio: {report['ratio']:.1%}")
 
 # run one inference step on both paths — they agree to float tolerance
 x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 153)), jnp.float32)
 state = model.init_state(2)
 h_dense, _ = model.dense_step(pruned, x, state)
-h_sparse, _ = model.sparse_step(packed, x, state)   # Pallas kernels
-print("dense vs packed-sparse max err:",
+h_sparse, _ = model.sparse_step(packed, x, state,
+                                backend=plan.backend)   # Pallas kernels
+h_ref, _ = model.sparse_step(packed, x, state, backend="ref")
+print("dense vs packed-sparse (pallas) max err:",
       float(jnp.abs(h_dense - h_sparse).max()))
+print("pallas vs ref backend max err:",
+      float(jnp.abs(h_sparse - h_ref).max()))

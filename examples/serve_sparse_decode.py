@@ -15,8 +15,7 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import build_model
-from repro.training import brds_masks, sparsity_report
-from repro.training.masked import apply_masks
+from repro.sparse import transformer_policy
 from repro.serving import ServeEngine
 from repro import hw
 
@@ -28,14 +27,14 @@ def main():
     B, P, G = 4, 32, 16
     prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
 
-    eng = ServeEngine(model, cfg, max_len=P + G, batch=B)
+    # dual-ratio policy: family A (feed-forward) 87.5%, family B (mixers) 75%
+    eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                      sparsity=transformer_policy(0.875, 0.75))
     t0 = time.time()
     out_dense = eng.generate(params, prompt, steps=G)
     t_dense = time.time() - t0
 
-    masks = brds_masks(params, 0.875, 0.75)
-    sparse_params = apply_masks(params, masks)
-    rep = sparsity_report(sparse_params, masks)
+    sparse_params, rep = eng.prepare(params)
     t0 = time.time()
     out_sparse = eng.generate(sparse_params, prompt, steps=G)
     t_sparse = time.time() - t0

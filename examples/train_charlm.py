@@ -16,9 +16,9 @@ import numpy as np
 
 from repro.configs import smoke_config
 from repro.models import build_model
+from repro.sparse import transformer_policy
 from repro.training import (OptConfig, init_state, make_train_step,
-                            CharCorpus, CheckpointManager, brds_masks)
-from repro.training.masked import apply_masks
+                            CharCorpus, CheckpointManager)
 from repro.serving import ServeEngine
 
 
@@ -61,8 +61,8 @@ def main():
 
     # BRDS sparse fine-tune: prune FFN harder than attention, retrain
     print("\nBRDS dual-ratio sparse fine-tune (A=0.75, B=0.5)...")
-    masks = brds_masks(params, 0.75, 0.5)
-    params = apply_masks(params, masks)
+    plan = transformer_policy(0.75, 0.5).compile(params)
+    params, masks = plan.prune(params)
     b0 = {k: jnp.asarray(v) for k, v in ds.batch(777, args.batch, args.seq).items()}
     print("loss after prune:", float(model.loss(params, b0)))
     step_m = jax.jit(make_train_step(model, cfg, oc, masks=masks))

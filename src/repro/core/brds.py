@@ -1,40 +1,19 @@
-"""The BRDS dual-ratio search algorithm (paper Fig. 5).
+"""DEPRECATED shim — the BRDS Fig.-5 search now lives in ``repro.sparse``.
 
-Searches the (Spar_x, Spar_h) plane subject to a designer-given overall
-sparsity target OS:
-
-  phase 1 (lines 1-6):  ramp both ratios 0 → OS in steps of alpha, pruning and
-                        retraining at each step; the result is NN_{P,I}.
-  phase 2 (lines 7-14): from NN_{P,I}, walk Spar_x up / Spar_h down in steps
-                        (delta_x, delta_h), prune+retrain+eval each tuple.
-  phase 3 (lines 15-23): reload NN_{P,I}, walk the opposite direction.
-  return the tuple with the best model accuracy (lines 24).
-
-The algorithm is model-agnostic: it drives three callbacks —
-
-  prune_fn(params, spar_x, spar_h)   -> (params, masks)   row-balanced prune
-                                        of the two weight families
-  retrain_fn(params, masks)          -> params             masked retraining
-  eval_fn(params)                    -> float              higher = better
-
-so it applies unchanged to the paper's LSTM and to any of the assigned
-transformer architectures (families per DESIGN.md §4).
+``repro.sparse.brds_search`` walks SparsityPolicy objects
+(``policy_at(spar_x, spar_h)`` + ``retrain_fn(params, plan, masks)``).
+This module keeps the legacy raw-callback signature
+(``prune_fn(params, spar_x, spar_h)`` / ``retrain_fn(params, masks)``)
+for out-of-tree callers, implemented over the same plane walk.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Any
+import warnings
+from typing import Any, Callable
+
+from ..sparse.search import (BRDSResult, execution_time_model, plane_search)
 
 __all__ = ["BRDSResult", "brds_search", "execution_time_model"]
-
-
-@dataclasses.dataclass
-class BRDSResult:
-    best_accuracy: float
-    best_spar_x: float
-    best_spar_h: float
-    best_params: Any
-    history: list  # list of dicts: phase, spar_x, spar_h, accuracy
 
 
 def brds_search(
@@ -49,51 +28,17 @@ def brds_search(
     delta_h: float = 0.05,
     max_ratio: float = 0.99,
 ) -> BRDSResult:
-    """Run the Fig.-5 search. Ratios are fractions in [0, 1]."""
-    os_ = float(overall_sparsity)
-    history: list[dict] = []
+    """Legacy callback-based search. Prefer ``repro.sparse.brds_search``."""
+    warnings.warn(
+        "repro.core.brds_search is deprecated; use repro.sparse.brds_search "
+        "with a SparsityPolicy factory (policy_at=) instead",
+        DeprecationWarning, stacklevel=2)
 
-    # ---- phase 1: ramp to the initial point NN_{P,I} (lines 1-6)
-    spar_x = spar_h = 0.0
-    while spar_x < os_ and spar_h < os_:
-        spar_x = min(os_, spar_x + alpha)
-        spar_h = min(os_, spar_h + alpha)
-        params, masks = prune_fn(params, spar_x, spar_h)
-        params = retrain_fn(params, masks)
-    nn_pi = params
-    acc = float(eval_fn(params))
-    best = BRDSResult(acc, spar_x, spar_h, params, history)
-    history.append(dict(phase="init", spar_x=spar_x, spar_h=spar_h, accuracy=acc))
+    def visit(p, sx, sh):
+        p, masks = prune_fn(p, sx, sh)
+        return retrain_fn(p, masks), None
 
-    def _walk(params, sx, sh, dx, dh, phase):
-        nonlocal best
-        while 0.0 < sx + dx <= max_ratio and 0.0 <= sh - dh < max_ratio:
-            sx = min(max_ratio, sx + dx)
-            sh = max(0.0, sh - dh)
-            params, masks = prune_fn(params, sx, sh)
-            params = retrain_fn(params, masks)
-            acc = float(eval_fn(params))
-            history.append(dict(phase=phase, spar_x=sx, spar_h=sh, accuracy=acc))
-            if acc > best.best_accuracy:
-                best = BRDSResult(acc, sx, sh, params, history)
-            if sx >= max_ratio or sh <= 0.0:
-                break
-        return params
-
-    # ---- phase 2: Spar_x up, Spar_h down (lines 7-14)
-    _walk(nn_pi, spar_x, spar_h, +delta_x, +delta_h, phase="x_up")
-    # ---- phase 3: reload NN_{P,I}; Spar_x down, Spar_h up (lines 15-23)
-    _walk(nn_pi, spar_x, spar_h, -delta_x, -delta_h, phase="h_up")
-
-    best.history = history
-    return best
-
-
-def execution_time_model(os_: float, alpha: float, delta_x: float,
-                         delta_h: float, ept: float, n_re: int) -> dict:
-    """The paper's cost model, eqs. (3)-(6). Ratios in percent or fractions
-    (consistent units). Returns the per-phase and total times."""
-    ex1 = (os_ / alpha) * ept * n_re
-    ex2 = min((1.0 - os_) / delta_x, os_ / delta_h) * ept * n_re
-    ex3 = min((1.0 - os_) / delta_h, os_ / delta_x) * ept * n_re
-    return dict(ex1=ex1, ex2=ex2, ex3=ex3, total=ex1 + ex2 + ex3)
+    return plane_search(params, overall_sparsity=overall_sparsity,
+                        visit=visit, eval_fn=eval_fn, alpha=alpha,
+                        delta_x=delta_x, delta_h=delta_h,
+                        max_ratio=max_ratio)

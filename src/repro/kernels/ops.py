@@ -1,10 +1,11 @@
 """jit'd public wrappers around the Pallas kernels.
 
-On CPU (this container) kernels run with interpret=True; on TPU they
-compile. Wrappers handle padding to block multiples and expose a uniform
-`use_kernel` escape hatch that falls back to the pure-jnp reference — the
-dry-run path lowers the reference formulation (XLA fuses it) while tests
-exercise kernel↔ref equivalence.
+Backend selection goes through ``repro.sparse.backend``: "pallas" runs the
+kernels (interpret mode on CPU, compiled on TPU), "ref" the pure-jnp
+reference formulations (the dry-run path lowers these; XLA fuses them),
+"auto"/None the configured default. The old per-call ``use_kernel=``
+boolean is accepted as a deprecated alias. Wrappers handle padding to
+block multiples.
 """
 from __future__ import annotations
 
@@ -19,10 +20,18 @@ from .lstm_gates import lstm_gates as _lstm_gates_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .decode_attention import decode_attention as _decode_kernel
 from ..core.packing import RowBalancedSparse
+from ..sparse import backend as _backend
 
 
 def on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _resolve(backend: str | None, use_kernel: bool | None) -> str:
+    """→ concrete "pallas" | "ref" (use_kernel= is the deprecated alias)."""
+    if use_kernel is not None:
+        return _backend.from_use_kernel(use_kernel, stacklevel=4)
+    return _backend.resolve(backend)
 
 
 def _pad_rows(arr, mult):
@@ -36,9 +45,10 @@ def _pad_rows(arr, mult):
 # ---------------------------------------------------------------- rb_spmv
 
 def rb_spmv(s: RowBalancedSparse, x: jnp.ndarray, *, block_rows: int = 256,
-            use_kernel: bool = True) -> jnp.ndarray:
+            backend: str | None = None,
+            use_kernel: bool | None = None) -> jnp.ndarray:
     """Packed row-balanced SpMV; x (B, ncols) → (B, rows)."""
-    if not use_kernel:
+    if _resolve(backend, use_kernel) == "ref":
         return _ref.rb_spmv_ref(s, x)
     R = s.rows
     block_rows = min(block_rows, R)
@@ -50,9 +60,10 @@ def rb_spmv(s: RowBalancedSparse, x: jnp.ndarray, *, block_rows: int = 256,
 
 
 def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
-                 *, block_rows: int = 256, use_kernel: bool = True):
+                 *, block_rows: int = 256, backend: str | None = None,
+                 use_kernel: bool | None = None):
     """z = Sx@x + Sh@h + bias — the fused dual-ratio gate preactivation."""
-    if not use_kernel:
+    if _resolve(backend, use_kernel) == "ref":
         return _ref.rb_dual_spmv_ref(sx, x, sh, h, bias)
     R = sx.rows
     block_rows = min(block_rows, R)
@@ -69,8 +80,8 @@ def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
 # ---------------------------------------------------------------- lstm cell
 
 def lstm_gates(zf, zi, zg, zo, c_prev, *, pwl: bool = False,
-               use_kernel: bool = True):
-    if not use_kernel:
+               backend: str | None = None, use_kernel: bool | None = None):
+    if _resolve(backend, use_kernel) == "ref":
         return _ref.lstm_cell_ref(zf, zi, zg, zo, c_prev, pwl=pwl)
     B, H = zf.shape
     block = H
@@ -86,8 +97,9 @@ def lstm_gates(zf, zi, zg, zo, c_prev, *, pwl: bool = False,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     block_q: int = 256, block_kv: int = 256,
-                    use_kernel: bool = True):
-    if not use_kernel:
+                    backend: str | None = None,
+                    use_kernel: bool | None = None):
+    if _resolve(backend, use_kernel) == "ref":
         return _ref.mha_ref(q, k, v, causal=causal, window=window)
     B, Hq, Sq, D = q.shape
     Sk = k.shape[2]
@@ -98,8 +110,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
 
 
 def decode_attention(q, k, v, lengths, *, block_kv: int = 512,
-                     use_kernel: bool = True):
-    if not use_kernel:
+                     backend: str | None = None,
+                     use_kernel: bool | None = None):
+    if _resolve(backend, use_kernel) == "ref":
         return _ref.decode_attention_ref(q, k, v, lengths)
     S = k.shape[2]
     bk = max(g for g in (block_kv, 256, 128, 64, 32, 16, 8, 1) if S % g == 0)

@@ -105,10 +105,10 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
         p_sh = train_loop.param_shardings(mesh, model)
     brds_report = None
     if brds:
-        from repro.training.masked import brds_pack_params
+        from repro.sparse import transformer_policy
         bc = arch.brds
-        params_abs, brds_report = brds_pack_params(
-            params_abs, bc.spar_a, bc.spar_b, abstract=True)
+        plan = transformer_policy(bc.spar_a, bc.spar_b).compile(params_abs)
+        params_abs, brds_report = plan.pack(params_abs, abstract=True)
         p_sh = _packed_shardings(mesh, params_abs, p_sh)
     scalar = NamedSharding(mesh, P())
 

@@ -35,15 +35,17 @@ def main():
     params = model.init(jax.random.key(0))
     print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M")
 
+    sparsity = None
     if args.brds:
-        from repro.training import brds_masks, sparsity_report
-        from repro.training.masked import apply_masks
-        masks = brds_masks(params, args.spar_a, args.spar_b)
-        params = apply_masks(params, masks)
-        print("BRDS:", sparsity_report(params, masks))
+        from repro.sparse import transformer_policy
+        sparsity = transformer_policy(args.spar_a, args.spar_b)
 
     max_len = args.prompt_len + args.gen
-    eng = ServeEngine(model, cfg, max_len=max_len, batch=args.batch)
+    eng = ServeEngine(model, cfg, max_len=max_len, batch=args.batch,
+                      sparsity=sparsity)
+    params, brds_report = eng.prepare(params)
+    if brds_report is not None:
+        print("BRDS:", brds_report)
     rng = jax.random.key(1)
     tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size)

@@ -46,8 +46,8 @@ def main():
     from repro.models import build_model
     from repro.training import (OptConfig, init_state, make_train_step,
                                 jit_train_step, ZipfInduction, ShardedLoader,
-                                CheckpointManager, StragglerMonitor,
-                                brds_masks, sparsity_report)
+                                CheckpointManager, StragglerMonitor)
+    from repro.sparse import transformer_policy
 
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
     model = build_model(cfg)
@@ -62,10 +62,9 @@ def main():
 
     masks = None
     if args.brds:
-        masks = brds_masks(params, args.spar_a, args.spar_b)
-        from repro.training.masked import apply_masks
-        params = apply_masks(params, masks)
-        print("BRDS:", sparsity_report(params, masks))
+        plan = transformer_policy(args.spar_a, args.spar_b).compile(params)
+        params, masks = plan.prune(params)
+        print("BRDS:", plan.summary(masks))
 
     if args.mesh == "host":
         step_fn = jax.jit(make_train_step(model, cfg, oc, masks))

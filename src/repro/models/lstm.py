@@ -17,8 +17,10 @@ import jax.numpy as jnp
 
 from . import layers as L
 from ..core import sparsity as S
-from ..core import packing as P
 from ..kernels import ops as K
+from ..sparse import backend as SB
+from ..sparse import get_format, lstm_policy
+from ..sparse import mask_grads as _sparse_mask_grads
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,21 +133,25 @@ class LSTMModel:
         return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
 
     # ------------------------------------------------------------- BRDS
+    # The sparsity surface is repro.sparse: these methods are conveniences
+    # over lstm_policy → SparsityPlan so existing callers keep working.
+    def sparsity_policy(self, spar_x: float, spar_h: float, *,
+                        backend: str = "auto"):
+        """The paper's dual-ratio policy for this model's param tree."""
+        return lstm_policy(spar_x, spar_h, backend=backend)
+
     def prune(self, params, spar_x: float, spar_h: float):
         """Row-balanced dual-ratio prune of every layer. Returns
-        (pruned_params, masks) — masks pytree matches params['layers']."""
-        masks = []
-        new_layers = []
-        for lp in params["layers"]:
-            mx = S.row_balanced_mask(lp["w_x"], spar_x)
-            mh = S.row_balanced_mask(lp["w_h"], spar_h)
-            masks.append({"w_x": mx, "w_h": mh})
-            new_layers.append({**lp, "w_x": S.apply_mask(lp["w_x"], mx),
-                               "w_h": S.apply_mask(lp["w_h"], mh)})
-        return {**params, "layers": new_layers}, masks
+        (pruned_params, masks) — masks: {path: bool_mask} (repro.sparse
+        layout, accepted by mask_grads)."""
+        plan = self.sparsity_policy(spar_x, spar_h).compile(params)
+        return plan.prune(params)
 
     def mask_grads(self, grads, masks):
-        """Freeze pruned weights: zero their gradients."""
+        """Freeze pruned weights: zero their gradients. Accepts the plan's
+        {path: mask} dict or the legacy per-layer list of dicts."""
+        if isinstance(masks, dict):
+            return _sparse_mask_grads(grads, masks)
         new_layers = []
         for g, m in zip(grads["layers"], masks):
             new_layers.append({**g,
@@ -154,30 +160,47 @@ class LSTMModel:
         return {**grads, "layers": new_layers}
 
     def pack(self, params):
-        """Pack pruned layers into RowBalancedSparse pairs for serving."""
+        """Pack pruned layers into RowBalancedSparse pairs for serving
+        (packs the surviving non-zeros of each already-pruned weight)."""
+        fmt = get_format("row_balanced")
         packed = []
         for lp in params["layers"]:
-            sx = P.pack(lp["w_x"], lp["w_x"] != 0)
-            sh = P.pack(lp["w_h"], lp["w_h"] != 0)
+            sx = fmt.pack(lp["w_x"], lp["w_x"] != 0)
+            sh = fmt.pack(lp["w_h"], lp["w_h"] != 0)
             packed.append({"sx": sx, "sh": sh, "b": lp["b"]})
         return packed
 
-    def sparse_step(self, packed, x_t, state, *, use_kernel=True):
+    @staticmethod
+    def _packed_layers(packed):
+        """Normalize to the per-layer [{'sx','sh','b'}] list: accepts that
+        list directly or a SparsityPlan.pack'd param tree (whose w_x/w_h
+        leaves are RowBalancedSparse)."""
+        if isinstance(packed, dict) and "layers" in packed:
+            return [{"sx": lp["w_x"], "sh": lp["w_h"], "b": lp["b"]}
+                    for lp in packed["layers"]]
+        return packed
+
+    def sparse_step(self, packed, x_t, state, *, backend: str | None = None,
+                    use_kernel: bool | None = None):
         """One inference time step on the packed BRDS path.
 
         x_t (B, X); state: list of (c, h) per layer. The dual-ratio fused
-        kernel is the accelerator's Gate module; lstm_gates is Function."""
+        kernel is the accelerator's Gate module; lstm_gates is Function.
+        ``packed`` is model.pack's per-layer list or a SparsityPlan.pack'd
+        param tree."""
+        if use_kernel is not None:
+            backend = SB.from_use_kernel(use_kernel)
         cfg = self.cfg
         new_state = []
         inp = x_t
-        for lp, (c, h) in zip(packed, state):
+        for lp, (c, h) in zip(self._packed_layers(packed), state):
             z = K.rb_dual_spmv(lp["sx"], inp, lp["sh"], h, lp["b"],
-                               use_kernel=use_kernel)
+                               backend=backend)
             H = cfg.hidden
             c, h = K.lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
                                 z[:, 3 * H:], c,
                                 pwl=cfg.pwl_activations,
-                                use_kernel=use_kernel)
+                                backend=backend)
             new_state.append((c, h))
             inp = h
         return inp, new_state

@@ -257,14 +257,22 @@ def dot_flops(comps, mult) -> float:
             cm = _CONTRACT.search(line)
             contract = 1
             if ops and cm and cm.group(1):
-                lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
-                lhs_shape = comp.shapes.get(lhs_name)
-                if lhs_shape:
-                    dims = _shape_dims(lhs_shape)
-                    for idx in cm.group(1).split(","):
-                        i = int(idx)
-                        if i < len(dims):
-                            contract *= dims[i]
+                # Operands separate on ", " — shape dim commas ("f32[8,16]")
+                # have no space, so a plain str.split(",") truncates the lhs
+                # shape and drops contraction dims.
+                lhs = ops.group(1).split(", ")[0].strip()
+                # Post-opt HLO writes operands as "<shape> %name"; read the
+                # inline shape, falling back to the defining op for bare
+                # "%name" operands.
+                dims = _shape_dims(lhs)
+                if not dims:
+                    lhs_name = lhs.split()[-1].lstrip("%")
+                    lhs_shape = comp.shapes.get(lhs_name)
+                    dims = _shape_dims(lhs_shape) if lhs_shape else []
+                for idx in cm.group(1).split(","):
+                    i = int(idx)
+                    if i < len(dims):
+                        contract *= dims[i]
             total += m * 2.0 * out_elems * contract
     return total
 

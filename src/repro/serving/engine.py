@@ -32,12 +32,16 @@ def cache_shardings(mesh: Mesh, model, batch: int, max_len: int):
 
 class ServeEngine:
     def __init__(self, model, cfg, mesh: Mesh | None = None,
-                 max_len: int = 2048, batch: int = 8):
+                 max_len: int = 2048, batch: int = 8, sparsity=None):
+        """``sparsity`` is the repro.sparse seam: a SparsityPolicy (or an
+        already-compiled SparsityPlan) applied to params via ``prepare``
+        before serving — the BRDS deployment scenario."""
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
         self.max_len = max_len
         self.batch = batch
+        self.sparsity = sparsity
         if mesh is not None:
             p_sh = param_shardings(mesh, model)
             c_sh = cache_shardings(mesh, model, batch, max_len)
@@ -52,6 +56,17 @@ class ServeEngine:
             self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("max_len",))
+
+    def prepare(self, params):
+        """Apply the engine's sparsity policy/plan to params (prune to the
+        policy's patterns). Returns (params, report) — report is None when
+        the engine is dense."""
+        if self.sparsity is None:
+            return params, None
+        plan = (self.sparsity.compile(params)
+                if hasattr(self.sparsity, "compile") else self.sparsity)
+        pruned, masks = plan.prune(params)
+        return pruned, plan.summary(masks)
 
     def generate(self, params, tokens, steps: int, *, extra=None,
                  temperature: float = 0.0, rng=None):

@@ -1,0 +1,36 @@
+"""repro.sparse — the one public API for sparsity.
+
+Three layers, one seam:
+
+  formats  — SparseFormat registry (row_balanced, bank_balanced, block,
+             unstructured): mask generation, packed representation,
+             matvec/dual_matvec kernel dispatch, memory accounting.
+  policy   — SparsityPolicy (per-weight-family pattern + ratio) compiles
+             against any model's param tree into a SparsityPlan with
+             prune / mask_grads / pack.
+  backend  — "pallas" | "ref" | "auto", configured once on the policy or
+             process-wide, replacing per-call use_kernel= flags.
+
+The BRDS Fig.-5 search walks SparsityPolicy objects (``brds_search``).
+Old surfaces (``LSTMModel.prune``-style methods, ``training.brds_masks``,
+``core.brds.brds_search``) remain as thin deprecation shims over this
+package.
+"""
+from .backend import (BACKENDS, get_default_backend, set_default_backend,
+                      use_backend)
+from .formats import (SparseFormat, MaskedDense, register, get_format,
+                      available_formats, dual_matvec)
+from .policy import (Rule, SparsityPolicy, SparsityPlan, lstm_policy,
+                     transformer_policy, apply_masks, mask_grads,
+                     sparsity_report)
+from .search import BRDSResult, brds_search, plane_search, \
+    execution_time_model
+
+__all__ = [
+    "BACKENDS", "get_default_backend", "set_default_backend", "use_backend",
+    "SparseFormat", "MaskedDense", "register", "get_format",
+    "available_formats", "dual_matvec",
+    "Rule", "SparsityPolicy", "SparsityPlan", "lstm_policy",
+    "transformer_policy", "apply_masks", "mask_grads", "sparsity_report",
+    "BRDSResult", "brds_search", "plane_search", "execution_time_model",
+]

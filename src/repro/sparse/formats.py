@@ -1,0 +1,303 @@
+"""SparseFormat registry — every sparsity pattern the system knows.
+
+A format owns the full lifecycle of its pattern:
+
+  mask(w, ratio)        pruning-mask generation (True = keep)
+  pack(w, mask)         packed representation (a pytree → jit/pjit/scan-safe)
+  unpack(packed)        dense reconstruction (zeros where pruned)
+  matvec / dual_matvec  kernel dispatch (backend: "pallas" | "ref" | "auto")
+  memory_bytes          storage accounting for the Table-1 analogue
+
+Matrix convention (the accelerator's): logical shape (rows, ncols) with
+rows = OUTPUT units and ncols = fan-in, so ``matvec(packed, x)`` maps
+x (B, ncols) → y (B, rows) and every row accumulates exactly its own
+non-zeros — the balanced-PE invariant.
+
+Registered formats: ``row_balanced`` (the paper's pattern, packed values +
+relative-address deltas, Pallas rb_spmv/rb_dual_spmv kernels),
+``bank_balanced`` (BBS [9]), ``block``, and ``unstructured`` (the Fig.-2
+baselines, stored as masked-dense with analytic packed-size accounting).
+New patterns (e.g. Spartus-style delta sparsity, ESE packed CSC) plug in by
+subclassing SparseFormat and calling ``register``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import sparsity as S
+from ..core import packing as P
+
+__all__ = ["SparseFormat", "MaskedDense", "register", "get_format",
+           "available_formats", "dual_matvec"]
+
+
+# ------------------------------------------------------------- generic rep
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MaskedDense:
+    """Masked-dense packed form for formats without a dedicated kernel:
+    ``values`` is the dense (rows, ncols) matrix with pruned entries zeroed,
+    ``mask`` the boolean keep-pattern. The matvec is a dense dot (XLA), so
+    these formats ride the whole prune→pack→serve pipeline; only the
+    storage accounting reflects their structure."""
+
+    values: jnp.ndarray
+    mask: jnp.ndarray
+
+    @property
+    def rows(self) -> int:
+        return self.values.shape[-2]
+
+    @property
+    def ncols(self) -> int:
+        return self.values.shape[-1]
+
+
+# ------------------------------------------------------------- base class
+
+class SparseFormat:
+    """Base class; subclasses override the pattern-specific pieces."""
+
+    name: str = ""
+
+    # -- mask generation -----------------------------------------------
+    def mask(self, w: jnp.ndarray, ratio: float, **opts) -> jnp.ndarray:
+        raise NotImplementedError
+
+    # -- packed representation -----------------------------------------
+    def pack(self, w: jnp.ndarray, mask: jnp.ndarray) -> Any:
+        return MaskedDense(values=S.apply_mask(w, mask), mask=mask)
+
+    def unpack(self, packed: Any) -> jnp.ndarray:
+        return packed.values
+
+    def abstract_pack(self, rows: int, ncols: int, ratio: float,
+                      dtype, **opts) -> Any:
+        """ShapeDtypeStruct stand-in of ``pack`` output (for dry-runs)."""
+        return MaskedDense(
+            values=jax.ShapeDtypeStruct((rows, ncols), dtype),
+            mask=jax.ShapeDtypeStruct((rows, ncols), jnp.bool_))
+
+    def stack(self, reps: list) -> Any:
+        """Combine per-layer packed reps into one stacked rep (leading L)."""
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+
+    def abstract_stack(self, rep: Any, L: int) -> Any:
+        """Stacked ShapeDtypeStruct rep from a single abstract rep."""
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct((L,) + x.shape, x.dtype), rep)
+
+    # -- kernels --------------------------------------------------------
+    def matvec(self, packed: Any, x: jnp.ndarray, *,
+               backend: str | None = None) -> jnp.ndarray:
+        """x (B, ncols) → (B, rows). Masked-dense default: a dense dot."""
+        del backend  # no dedicated kernel; XLA's dot is the only path
+        return (x.astype(jnp.float32)
+                @ packed.values.astype(jnp.float32).T).astype(x.dtype)
+
+    def dual_matvec(self, pa: Any, x: jnp.ndarray, pb: Any, h: jnp.ndarray,
+                    bias: jnp.ndarray | None = None, *,
+                    backend: str | None = None) -> jnp.ndarray:
+        """z = A@x + B@h (+ bias) — the LSTM gate preactivation shape."""
+        z = (self.matvec(pa, x, backend=backend).astype(jnp.float32)
+             + self.matvec(pb, h, backend=backend).astype(jnp.float32))
+        if bias is not None:
+            z = z + bias.astype(jnp.float32)[None, :]
+        return z.astype(x.dtype)
+
+    # -- storage accounting --------------------------------------------
+    def packed_bytes(self, rows: int, ncols: int, ratio: float,
+                     dtype, **opts) -> int:
+        """Analytic packed storage (values + index metadata)."""
+        raise NotImplementedError
+
+    def memory_bytes(self, packed: Any, **opts) -> dict:
+        """Accounting for a concrete packed rep (Table-1 analogue)."""
+        raise NotImplementedError
+
+    def _mem_dict(self, values_b: int, index_b: int, rows: int, ncols: int,
+                  itemsize: int) -> dict:
+        dense = rows * ncols * itemsize
+        return dict(values=values_b, indices=index_b,
+                    total=values_b + index_b, dense_equiv=dense,
+                    ratio=(values_b + index_b) / max(dense, 1))
+
+
+# ------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, SparseFormat] = {}
+
+
+def register(fmt: SparseFormat) -> SparseFormat:
+    if not fmt.name:
+        raise ValueError("format needs a non-empty .name")
+    _REGISTRY[fmt.name] = fmt
+    return fmt
+
+
+def get_format(name: str) -> SparseFormat:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown sparse format {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def available_formats() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------- row_balanced
+
+class RowBalancedFormat(SparseFormat):
+    """The paper's pattern: every row keeps exactly K non-zeros; packed as
+    (rows, K) values + delta-encoded column indices; served by the Pallas
+    rb_spmv / rb_dual_spmv kernels (fused dual-ratio gate preactivation)."""
+
+    name = "row_balanced"
+
+    def mask(self, w, ratio, **opts):
+        return S.row_balanced_mask(w, ratio)
+
+    def pack(self, w, mask):
+        return P.pack(w, mask)
+
+    def unpack(self, packed):
+        return P.unpack(packed)
+
+    def abstract_pack(self, rows, ncols, ratio, dtype, **opts):
+        k = S.keep_count(ncols, ratio)
+        dd = P._delta_dtype(ncols, k)
+        return P.RowBalancedSparse(
+            values=jax.ShapeDtypeStruct((rows, k), dtype),
+            deltas=jax.ShapeDtypeStruct((rows, k), jnp.dtype(dd)),
+            ncols=ncols)
+
+    def matvec(self, packed, x, *, backend=None):
+        from ..kernels import ops as K
+        return K.rb_spmv(packed, x, backend=backend)
+
+    def dual_matvec(self, pa, x, pb, h, bias=None, *, backend=None):
+        from ..kernels import ops as K
+        if bias is None:
+            bias = jnp.zeros((pa.rows,), jnp.float32)
+        return K.rb_dual_spmv(pa, x, pb, h, bias, backend=backend)
+
+    def packed_bytes(self, rows, ncols, ratio, dtype, **opts):
+        k = S.keep_count(ncols, ratio)
+        dd = P._delta_dtype(ncols, k)
+        return rows * k * (np.dtype(dtype).itemsize + dd.itemsize)
+
+    def memory_bytes(self, packed, **opts):
+        return packed.memory_bytes()
+
+
+# --------------------------------------------------------- bank_balanced
+
+class BankBalancedFormat(SparseFormat):
+    """BBS [9]: fine-grained pruning inside equal row banks. Stored
+    masked-dense; accounting models per-bank packed values + in-bank
+    positions (one narrow index per non-zero)."""
+
+    name = "bank_balanced"
+
+    def mask(self, w, ratio, *, num_banks: int = 4, **opts):
+        return S.bank_balanced_mask(w, ratio, num_banks=num_banks)
+
+    @staticmethod
+    def _index_bytes(bank: int) -> int:
+        """Narrowest int holding an in-bank position."""
+        return 1 if bank - 1 <= 255 else 2
+
+    def packed_bytes(self, rows, ncols, ratio, dtype, *, num_banks: int = 4,
+                     **opts):
+        bank = ncols // num_banks
+        k = S.keep_count(bank, ratio)
+        return rows * num_banks * k * (np.dtype(dtype).itemsize
+                                       + self._index_bytes(bank))
+
+    def memory_bytes(self, packed, *, num_banks: int = 4, **opts):
+        nnz = int(np.asarray(jnp.sum(packed.mask)))
+        it = packed.values.dtype.itemsize
+        idx_b = self._index_bytes(packed.ncols // num_banks)
+        return self._mem_dict(nnz * it, nnz * idx_b, packed.rows,
+                              packed.ncols, it)
+
+
+# ----------------------------------------------------------------- block
+
+class BlockFormat(SparseFormat):
+    """Block sparsity (Fig. 2c): values of surviving blocks + a one-bit
+    per-block occupancy map."""
+
+    name = "block"
+
+    def mask(self, w, ratio, *, block: tuple[int, int] = (4, 4), **opts):
+        return S.block_mask(w, ratio, block=block)
+
+    def packed_bytes(self, rows, ncols, ratio, dtype, *,
+                     block: tuple[int, int] = (4, 4), **opts):
+        br, bc = block
+        nbr, nbc = -(-rows // br), -(-ncols // bc)
+        nblocks = nbr * nbc
+        kept = max(1, nblocks - int(round(ratio * nblocks)))
+        return (kept * br * bc * np.dtype(dtype).itemsize
+                + (nblocks + 7) // 8)
+
+    def memory_bytes(self, packed, **opts):
+        nnz = int(np.asarray(jnp.sum(packed.mask)))
+        it = packed.values.dtype.itemsize
+        bitmap = (packed.mask.size + 7) // 8
+        return self._mem_dict(nnz * it, bitmap, packed.rows, packed.ncols,
+                              it)
+
+
+# ---------------------------------------------------------- unstructured
+
+class UnstructuredFormat(SparseFormat):
+    """Fine-grained global magnitude pruning; accounting models CSR
+    (values + int32 column index per non-zero + row pointers)."""
+
+    name = "unstructured"
+
+    def mask(self, w, ratio, **opts):
+        return S.unstructured_mask(w, ratio)
+
+    def packed_bytes(self, rows, ncols, ratio, dtype, **opts):
+        n = rows * ncols
+        nnz = max(1, n - int(round(ratio * n)))
+        return nnz * (np.dtype(dtype).itemsize + 4) + (rows + 1) * 4
+
+    def memory_bytes(self, packed, **opts):
+        nnz = int(np.asarray(jnp.sum(packed.mask)))
+        it = packed.values.dtype.itemsize
+        return self._mem_dict(nnz * it, nnz * 4 + (packed.rows + 1) * 4,
+                              packed.rows, packed.ncols, it)
+
+
+register(RowBalancedFormat())
+register(BankBalancedFormat())
+register(BlockFormat())
+register(UnstructuredFormat())
+
+
+# ------------------------------------------------- mixed-format dispatch
+
+def dual_matvec(fmt_a: SparseFormat, pa, x, fmt_b: SparseFormat, pb, h,
+                bias=None, *, backend: str | None = None):
+    """z = A@x + B@h (+ bias) across possibly different formats. Same-format
+    pairs use the format's fused path (row_balanced → the Pallas dual-ratio
+    kernel); mixed pairs fall back to two matvecs."""
+    if fmt_a is fmt_b:
+        return fmt_a.dual_matvec(pa, x, pb, h, bias, backend=backend)
+    z = (fmt_a.matvec(pa, x, backend=backend).astype(jnp.float32)
+         + fmt_b.matvec(pb, h, backend=backend).astype(jnp.float32))
+    if bias is not None:
+        z = z + bias.astype(jnp.float32)[None, :]
+    return z.astype(x.dtype)

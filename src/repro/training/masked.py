@@ -1,185 +1,50 @@
-"""BRDS masked retraining for the transformer zoo.
+"""DEPRECATED shim — BRDS masked retraining now lives in ``repro.sparse``.
 
-The paper freezes pruned weights and retrains the survivors (§3.2). Here:
-masks are boolean pytree entries keyed by flattened path; `apply_masks`
-zeros pruned weights, `mask_grads` freezes them.
+The transformer dual-ratio surface (``brds_masks`` / ``apply_masks`` /
+``mask_grads`` / ``brds_pack_params``) is implemented by
+``repro.sparse.transformer_policy`` compiled into a SparsityPlan:
 
-Row orientation: a "row" is one OUTPUT unit; pruning happens along the
-fan-in so each output accumulates exactly K products (the accelerator's
-balanced-PE invariant). Per-weight layout is declared in _LAYOUTS:
-(stack_dims, in_dims, out_dims) as index tuples.
+    plan = transformer_policy(spar_a, spar_b).compile(params)
+    pruned, masks = plan.prune(params)
+    grads = plan.mask_grads(grads, masks)
+    packed, report = plan.pack(params, abstract=...)
 
-Dual-ratio families (DESIGN.md §4):
-  family A (Spar_a, pruned harder) — feed-forward: mlp/*, moe/w_* (not router)
-  family B (Spar_b, softer)        — mixer: attn/w*, rec/w_*, rwkv/w_*, xattn/w*
+These wrappers keep the old call signatures (and mask dict layout,
+{path: bool_mask}) for out-of-tree callers, with a DeprecationWarning.
 """
 from __future__ import annotations
 
-import re
-from typing import Any
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..sparse.policy import (_path_str, apply_masks, mask_grads,
+                             transformer_policy, classify)
+from ..sparse.policy import sparsity_report as _sparsity_report
 
-from ..core.sparsity import row_balanced_mask, apply_mask
-
-# path-suffix regex -> family ('a'|'b'); order matters (first match wins)
-_FAMILY = [
-    (r"(mlp|moe)/w_(gate|up|down)$", "a"),
-    (r"rwkv/w_cm[12]$", "a"),
-    (r"(attn|xattn)/w[qkvo]$", "b"),
-    (r"rec/(w_in_gelu|w_in_rec|w_gate_a|w_gate_x|w_out)$", "b"),
-    (r"rwkv/w_[rkvgw]$", "b"),
-    (r"rwkv/w_out$", "b"),
-]
+__all__ = ["brds_masks", "apply_masks", "mask_grads", "brds_pack_params",
+           "sparsity_report", "classify"]
 
 
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
-
-
-def classify(path_str: str) -> str | None:
-    for pat, fam in _FAMILY:
-        if re.search(pat, path_str):
-            return fam
-    return None
-
-
-def _is_stacked(ps: str, leaf) -> bool:
-    return "blocks/" in ps and leaf.ndim >= 3
-
-
-def _structured_mask(w: jnp.ndarray, spar: float, ps: str,
-                     stacked: bool) -> jnp.ndarray:
-    """Row-balanced mask: rows = OUTPUT units, pruned along the fan-in.
-    Uses the same (in,out) layout resolution as the packed serving form
-    (_mat2d_info) so masked training and packing keep identical patterns."""
-    L, d_in, out = _mat2d_info(ps, w.shape, stacked)
-    w3 = w.reshape((L or 1), d_in, out)
-    m = row_balanced_mask(jnp.swapaxes(w3, -1, -2), spar)   # (L, out, in)
-    return jnp.swapaxes(m, -1, -2).reshape(w.shape)
+def _warn(old: str, new: str):
+    warnings.warn(f"repro.training.masked.{old} is deprecated; use "
+                  f"repro.sparse.{new}", DeprecationWarning, stacklevel=3)
 
 
 def brds_masks(params, spar_a: float, spar_b: float) -> dict:
     """Build masks for every prunable weight. Returns {path: bool_mask}."""
-    masks = {}
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    for path, leaf in flat:
-        ps = _path_str(path)
-        fam = classify(ps)
-        if fam is None or leaf.ndim < 2:
-            continue
-        spar = spar_a if fam == "a" else spar_b
-        if spar <= 0:
-            continue
-        masks[ps] = _structured_mask(leaf, spar, ps, _is_stacked(ps, leaf))
-    return masks
-
-
-def _map_masked(params, masks, fn):
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    out = []
-    for path, leaf in flat:
-        ps = _path_str(path)
-        out.append(fn(leaf, masks[ps]) if ps in masks else leaf)
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
-def apply_masks(params, masks):
-    return _map_masked(params, masks, apply_mask)
-
-
-def mask_grads(grads, masks):
-    return _map_masked(grads, masks, apply_mask)
-
-
-# ------------------------------------------------- packed (serving) form
-
-# suffixes whose OUT dims trail the first (input) dim; everything else is
-# (in..., out)-shaped with out = last dim
-_OUT_TRAILING = re.compile(r"rwkv/w_[rkvgw]$")
-
-
-def _mat2d_info(ps: str, shape: tuple, stacked: bool):
-    """→ (L or None, in_size, out_size) for a prunable leaf."""
-    core = shape[1:] if stacked else shape
-    if _OUT_TRAILING.search(ps):
-        d_in, out = core[0], int(np.prod(core[1:]))
-    else:
-        d_in, out = int(np.prod(core[:-1])), core[-1]
-    return (shape[0] if stacked else None), d_in, out
+    _warn("brds_masks", "transformer_policy(...).compile(params).masks()")
+    plan = transformer_policy(spar_a, spar_b).compile(params)
+    return plan.masks(params)
 
 
 def brds_pack_params(params, spar_a: float, spar_b: float,
                      abstract: bool = False):
     """Replace every prunable weight with its packed RowBalancedSparse form
     (rows = output units, cols = fan-in — the rb_spmv kernel layout).
-
-    abstract=True builds ShapeDtypeStruct stand-ins (for the dry-run);
-    concrete packing loops per stacked layer. Returns (new_params, report).
-    """
-    from ..core.packing import (RowBalancedSparse, pack, _delta_dtype)
-    from ..core.sparsity import row_balanced_mask, keep_count
-    import jax.numpy as jnp
-
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    out_leaves = []
-    dense_bytes = packed_bytes = 0
-    for path, leaf in flat:
-        ps = _path_str(path)
-        fam = classify(ps)
-        if fam is None or leaf.ndim < 2:
-            out_leaves.append(leaf)
-            if hasattr(leaf, "dtype"):
-                packed_bytes += leaf.size * leaf.dtype.itemsize
-                dense_bytes += leaf.size * leaf.dtype.itemsize
-            continue
-        spar = spar_a if fam == "a" else spar_b
-        stacked = "blocks/" in ps and leaf.ndim >= 3
-        L, d_in, out = _mat2d_info(ps, leaf.shape, stacked)
-        K = keep_count(d_in, spar)
-        dd = _delta_dtype(d_in, K)
-        vshape = (L, out, K) if L else (out, K)
-        dense_bytes += leaf.size * leaf.dtype.itemsize
-        packed_bytes += int(np.prod(vshape)) * (leaf.dtype.itemsize
-                                                + dd.itemsize)
-        if abstract:
-            s = RowBalancedSparse(
-                values=jax.ShapeDtypeStruct(vshape, leaf.dtype),
-                deltas=jax.ShapeDtypeStruct(vshape, jnp.dtype(dd)),
-                ncols=d_in)
-        else:
-            def pack_one(w2):
-                w2 = w2.reshape(d_in, out).T if not _OUT_TRAILING.search(ps) \
-                    else w2.reshape(d_in, out).T
-                return pack(w2, row_balanced_mask(w2, spar))
-            if L:
-                packs = [pack_one(leaf[i]) for i in range(L)]
-                s = RowBalancedSparse(
-                    values=jnp.stack([q.values for q in packs]),
-                    deltas=jnp.stack([q.deltas for q in packs]),
-                    ncols=d_in)
-            else:
-                s = pack_one(leaf)
-        out_leaves.append(s)
-    new = jax.tree_util.tree_unflatten(treedef, out_leaves)
-    return new, dict(dense_bytes=dense_bytes, packed_bytes=packed_bytes,
-                     ratio=packed_bytes / max(dense_bytes, 1))
+    Returns (new_params, report)."""
+    _warn("brds_pack_params", "transformer_policy(...).compile(params).pack()")
+    plan = transformer_policy(spar_a, spar_b).compile(params)
+    return plan.pack(params, abstract=abstract)
 
 
 def sparsity_report(params, masks) -> dict:
-    total = pruned = 0
-    for ps, m in masks.items():
-        total += m.size
-        pruned += int(m.size - jnp.sum(m))
-    return {"prunable_params": total, "pruned": pruned,
-            "sparsity": pruned / max(total, 1)}
+    return _sparsity_report(masks)

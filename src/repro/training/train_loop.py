@@ -12,7 +12,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import optim
-from .masked import apply_masks, mask_grads
+from ..sparse import apply_masks, mask_grads
 from ..sharding import resolve_spec, named_sharding
 from .. import sharding as shd
 

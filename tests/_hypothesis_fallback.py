@@ -1,0 +1,69 @@
+"""Minimal deterministic stand-in for the hypothesis API surface these
+tests use (@settings/@given + st.integers/st.floats), for containers
+without the real package. Draws are seeded (reproducible), boundary
+values are always exercised first, and ``max_examples`` is honored.
+
+When hypothesis IS installed the test modules import it instead — this
+shim never shadows the real thing.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import types
+
+
+class _Strategy:
+    def __init__(self, lo, hi, draw):
+        self.lo = lo
+        self.hi = hi
+        self._draw = draw
+
+    def draw(self, rng: random.Random, i: int):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(min_value, max_value,
+                     lambda r: r.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_):
+    return _Strategy(min_value, max_value,
+                     lambda r: r.uniform(min_value, max_value))
+
+
+strategies = types.SimpleNamespace(integers=_integers, floats=_floats)
+
+
+def settings(max_examples: int = 20, deadline=None, **_):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", 20)
+            rng = random.Random(0xB2D5)
+            for i in range(n):
+                drawn = {k: s.draw(rng, i)
+                         for k, s in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+        # Present a signature WITHOUT the strategy-drawn params (and no
+        # __wrapped__), so pytest doesn't look for fixtures named after
+        # them — mirroring hypothesis's own signature rewriting.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs])
+        return wrapper
+    return deco

@@ -69,8 +69,10 @@ def test_compressed_psum_matches_exact():
     from jax.experimental.shard_map import shard_map
     from repro.training.compression import compressed_psum
 
-    mesh = jax.make_mesh((8,), ('data',),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # axis_types= / jax.sharding.AxisType only exist on jax >= 0.5
+    at = getattr(jax.sharding, 'AxisType', None)
+    kw = dict(axis_types=(at.Auto,)) if at is not None else {}
+    mesh = jax.make_mesh((8,), ('data',), **kw)
     g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
 
     def f(gl, res):

@@ -1,0 +1,267 @@
+"""The unified sparsity API: format-registry round-trips, policy→plan
+equivalence with the legacy surfaces, and pallas↔ref backend parity."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsity as S
+from repro.core import packing as P
+from repro.kernels import ops as K
+from repro.kernels import ref
+from repro.sparse import (SparsityPolicy, available_formats, brds_search,
+                          get_format, lstm_policy, transformer_policy,
+                          use_backend, dual_matvec)
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape),
+                       jnp.float32)
+
+
+# ------------------------------------------------------------- registry
+
+def test_registry_lists_the_four_formats():
+    assert {"row_balanced", "bank_balanced", "block",
+            "unstructured"} <= set(available_formats())
+    with pytest.raises(KeyError):
+        get_format("no_such_format")
+
+
+@pytest.mark.parametrize("name,opts", [
+    ("row_balanced", {}),
+    ("bank_balanced", {"num_banks": 4}),
+    ("block", {"block": (4, 4)}),
+    ("unstructured", {}),
+])
+@pytest.mark.parametrize("spar", [0.25, 0.75])
+def test_format_roundtrip_prune_pack_unpack(name, opts, spar):
+    """For every registered format: unpack(pack(w, mask)) == masked dense."""
+    fmt = get_format(name)
+    w = _rand((16, 32), seed=3)
+    m = fmt.mask(w, spar, **opts)
+    dense = S.apply_mask(w, m)
+    packed = fmt.pack(w, m)
+    np.testing.assert_allclose(np.asarray(fmt.unpack(packed)),
+                               np.asarray(dense))
+    # matvec agrees with the dense product of the masked matrix
+    x = _rand((2, 32), seed=4)
+    got = fmt.matvec(packed, x, backend="ref" if name == "row_balanced"
+                     else None)
+    want = x @ dense.T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("name,opts", [
+    ("row_balanced", {}),
+    ("bank_balanced", {"num_banks": 4}),
+    ("block", {"block": (4, 4)}),
+    ("unstructured", {}),
+])
+def test_format_memory_accounting(name, opts):
+    """Packed bytes beat dense at high sparsity; the analytic model tracks
+    the concrete accounting."""
+    fmt = get_format(name)
+    w = _rand((32, 64), seed=5)
+    m = fmt.mask(w, 0.75, **opts)
+    mem = fmt.memory_bytes(fmt.pack(w, m))
+    assert mem["total"] < mem["dense_equiv"]
+    analytic = fmt.packed_bytes(32, 64, 0.75, jnp.float32, **opts)
+    assert analytic == pytest.approx(mem["total"], rel=0.35)
+
+
+def test_bank_balanced_wide_bank_index_width():
+    """Banks wider than 256 need 2-byte in-bank indices — analytic and
+    concrete accounting must agree on that."""
+    fmt = get_format("bank_balanced")
+    w = _rand((4, 2048), seed=6)
+    m = fmt.mask(w, 0.5, num_banks=4)
+    mem = fmt.memory_bytes(fmt.pack(w, m), num_banks=4)
+    assert mem["total"] == fmt.packed_bytes(4, 2048, 0.5, jnp.float32,
+                                            num_banks=4)
+
+
+# ------------------------------------------------------- policy ↔ legacy
+
+def test_lstm_plan_matches_legacy_prune_and_pack():
+    """The compiled plan reproduces the old LSTMModel.prune/pack outputs
+    exactly (same masks, same packed values/deltas)."""
+    from repro.models import LSTMModel, LSTMConfig
+    cfg = LSTMConfig("t", input_size=24, hidden=32, num_layers=2,
+                     num_classes=8, framewise=True)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    sx, sh = 0.7, 0.4
+
+    plan = lstm_policy(sx, sh).compile(params)
+    pruned, masks = plan.prune(params)
+
+    for i, lp in enumerate(params["layers"]):
+        # legacy implementation: row_balanced_mask directly on each weight
+        mx = S.row_balanced_mask(lp["w_x"], sx)
+        mh = S.row_balanced_mask(lp["w_h"], sh)
+        np.testing.assert_array_equal(np.asarray(masks[f"layers/{i}/w_x"]),
+                                      np.asarray(mx))
+        np.testing.assert_array_equal(np.asarray(masks[f"layers/{i}/w_h"]),
+                                      np.asarray(mh))
+        np.testing.assert_allclose(
+            np.asarray(pruned["layers"][i]["w_x"]),
+            np.asarray(S.apply_mask(lp["w_x"], mx)))
+
+    packed_tree, _ = plan.pack(pruned, masks=masks)
+    legacy = model.pack(pruned)
+    for i in range(cfg.num_layers):
+        new_sx = packed_tree["layers"][i]["w_x"]
+        np.testing.assert_allclose(np.asarray(new_sx.values),
+                                   np.asarray(legacy[i]["sx"].values))
+        np.testing.assert_array_equal(np.asarray(new_sx.deltas),
+                                      np.asarray(legacy[i]["sx"].deltas))
+
+
+def test_transformer_plan_matches_legacy_brds_masks():
+    """transformer_policy reproduces training.brds_masks (the shim now
+    delegates, so assert the row-balance invariant independently too)."""
+    from repro.configs import smoke_config
+    from repro.models import build_model
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+
+    plan = transformer_policy(0.875, 0.5).compile(params)
+    masks = plan.masks(params)
+    assert masks, "policy matched no transformer weights"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.training import brds_masks
+        legacy = brds_masks(params, 0.875, 0.5)
+    assert set(masks) == set(legacy)
+    for ps in masks:
+        np.testing.assert_array_equal(np.asarray(masks[ps]),
+                                      np.asarray(legacy[ps]))
+
+    # row-balance invariant: equal keep-count along every output's fan-in
+    for ps, site in plan.sites.items():
+        m_oi = np.asarray(site.to_oi(masks[ps]))      # (L1, out, in)
+        counts = m_oi.sum(axis=-1)
+        assert (counts == counts.flat[0]).all(), ps
+
+
+def test_plan_pack_abstract_matches_concrete():
+    from repro.models import LSTMModel, LSTMConfig
+    cfg = LSTMConfig("t", input_size=16, hidden=16, num_layers=1,
+                     num_classes=4)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    plan = lstm_policy(0.5, 0.5).compile(params)
+    concrete, rep_c = plan.pack(params)
+    abstract, rep_a = plan.pack(params, abstract=True)
+    c = concrete["layers"][0]["w_x"]
+    a = abstract["layers"][0]["w_x"]
+    assert a.values.shape == c.values.shape
+    assert a.deltas.dtype == c.deltas.dtype
+    assert a.ncols == c.ncols
+    assert rep_a == rep_c
+
+
+# ------------------------------------------------------- backend parity
+
+@pytest.mark.parametrize("rows,cols,spar,B", [(128, 64, 0.5, 2),
+                                              (96, 33, 0.75, 3)])
+def test_rb_spmv_backend_parity(rows, cols, spar, B):
+    s = P.pack_from_dense(_rand((rows, cols), seed=7), spar)
+    x = _rand((B, cols), seed=8)
+    got_k = K.rb_spmv(s, x, block_rows=64, backend="pallas")
+    got_r = K.rb_spmv(s, x, backend="ref")
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(got_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_rb_dual_spmv_backend_parity():
+    H, X = 64, 48
+    sx = P.pack_from_dense(_rand((4 * H, X), seed=9), 0.875)
+    sh = P.pack_from_dense(_rand((4 * H, H), seed=10), 0.5)
+    x, h, b = _rand((2, X), 11), _rand((2, H), 12), _rand((4 * H,), 13)
+    got_k = K.rb_dual_spmv(sx, x, sh, h, b, block_rows=64, backend="pallas")
+    got_r = K.rb_dual_spmv(sx, x, sh, h, b, backend="ref")
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(got_r),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_default_backend_context():
+    s = P.pack_from_dense(_rand((32, 16), seed=14), 0.5)
+    x = _rand((1, 16), seed=15)
+    want = ref.rb_spmv_ref(s, x)
+    with use_backend("ref"):
+        got = K.rb_spmv(s, x)       # no per-call flag: default applies
+        # "auto" defers to the default too, so policies left at
+        # backend="auto" follow set_default_backend/use_backend
+        got_auto = K.rb_spmv(s, x, backend="auto")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+    np.testing.assert_allclose(np.asarray(got_auto), np.asarray(want))
+
+
+def test_use_kernel_is_deprecated_but_works():
+    s = P.pack_from_dense(_rand((32, 16), seed=16), 0.5)
+    x = _rand((1, 16), seed=17)
+    with pytest.warns(DeprecationWarning):
+        got = K.rb_spmv(s, x, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.rb_spmv_ref(s, x)))
+
+
+def test_mixed_format_dual_matvec():
+    fa, fb = get_format("row_balanced"), get_format("unstructured")
+    wx, wh = _rand((32, 16), 18), _rand((32, 8), 19)
+    ma = fa.mask(wx, 0.5)
+    mb = fb.mask(wh, 0.5)
+    pa, pb = fa.pack(wx, ma), fb.pack(wh, mb)
+    x, h = _rand((2, 16), 20), _rand((2, 8), 21)
+    bias = _rand((32,), 22)
+    got = dual_matvec(fa, pa, x, fb, pb, h, bias, backend="ref")
+    want = (x @ S.apply_mask(wx, ma).T + h @ S.apply_mask(wh, mb).T
+            + bias[None, :])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ----------------------------------------------------------- the search
+
+def test_policy_search_end_to_end():
+    """brds_search walks SparsityPolicy objects and returns the best tuple
+    with its policy."""
+    from repro.models import LSTMModel, LSTMConfig
+    from repro.training import OptConfig, init_state
+    from repro.training.optim import apply_update
+    from repro.training.data import FrameCorpus
+    cfg = LSTMConfig("s", input_size=12, hidden=16, num_layers=1,
+                     num_classes=4, framewise=True)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    ds = FrameCorpus(input_size=12, num_classes=4)
+    oc = OptConfig(lr=3e-3, total_steps=100, warmup_steps=1)
+    lg = jax.jit(jax.value_and_grad(lambda p, b: model.loss(p, b)))
+
+    def retrain_fn(p, plan, masks):
+        st = init_state(oc, p)
+        for i in range(2):
+            b = {k: jnp.asarray(v) for k, v in ds.batch(i, 4, 8).items()}
+            _, g = lg(p, b)
+            g = plan.mask_grads(g, masks)
+            p, st, _ = apply_update(oc, p, g, st)
+        return p
+
+    def eval_fn(p):
+        b = {k: jnp.asarray(v) for k, v in ds.batch(99, 4, 8).items()}
+        return -float(model.loss(p, b))
+
+    res = brds_search(params, overall_sparsity=0.5, policy_at=lstm_policy,
+                      retrain_fn=retrain_fn, eval_fn=eval_fn,
+                      alpha=0.25, delta_x=0.25, delta_h=0.25)
+    assert len(res.history) >= 3
+    assert {h["phase"] for h in res.history} >= {"init"}
+    assert res.best_policy is not None
+    # the winning policy re-applies cleanly
+    plan = res.best_policy.compile(res.best_params)
+    _, masks = plan.prune(res.best_params)
+    assert plan.summary(masks)["sparsity"] > 0.0

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # container ships no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import (row_balanced_mask, unstructured_mask, block_mask,
                         bank_balanced_mask, apply_mask, keep_count,

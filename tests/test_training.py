@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # container ships no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.training import OptConfig, init_state
 from repro.training.optim import apply_update, lr_at, global_norm
