@@ -4,11 +4,11 @@ import sys
 
 
 def main() -> None:
-    from . import fig4_dual_ratio, fig9_patterns, table1_resources, \
-        table2_throughput
+    from . import decode_throughput, fig4_dual_ratio, fig9_patterns, \
+        table1_resources, table2_throughput
     print("name,us_per_call,derived")
-    for mod in (table1_resources, table2_throughput, fig9_patterns,
-                fig4_dual_ratio):
+    for mod in (table1_resources, table2_throughput, decode_throughput,
+                fig9_patterns, fig4_dual_ratio):
         mod.main()
         sys.stdout.flush()
 

@@ -21,8 +21,8 @@ def main():
     model = LSTMModel(cfg)
     params = model.init(jax.random.key(0))
     OS = 0.875
-    pruned, _ = model.prune(params, OS, OS)
-    packed = model.pack(pruned)
+    pruned, masks = model.prune(params, OS, OS)
+    packed = model.pack(pruned, masks)
     B = 1
     x = jnp.asarray(np.random.default_rng(0).normal(size=(B, 153)),
                     jnp.float32)

@@ -72,13 +72,16 @@ def main():
         params, st, m = step_m(params, st, batch, jnp.int32(args.steps + i))
     print("loss after sparse retrain:", float(model.loss(params, b0)))
 
-    # sample
+    # sample: greedy and temperature/top-k, each one on-device decode dispatch
     eng = ServeEngine(model, cfg, max_len=args.seq + 48, batch=1)
     prompt_txt = "the quick brown "
     itos = {v: k for k, v in ds.stoi.items()}
     prompt = jnp.asarray([[ds.stoi[c] for c in prompt_txt]], jnp.int32)
     out = eng.generate(params, prompt, steps=48)
-    print("\nsample:", prompt_txt + "".join(itos[int(i)] for i in out[0]))
+    print("\ngreedy:", prompt_txt + "".join(itos[int(i)] for i in out[0]))
+    out = eng.generate(params, prompt, steps=48, temperature=0.8, top_k=20,
+                       rng=jax.random.key(7))
+    print("t=0.8 k=20:", prompt_txt + "".join(itos[int(i)] for i in out[0]))
 
 
 if __name__ == "__main__":

@@ -77,6 +77,23 @@ def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
     return z[:, :R] if padded else z
 
 
+def brds_lstm_step(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h_prev,
+                   bias, c_prev, *, pwl: bool = False,
+                   block_rows: int = 256, backend: str | None = None):
+    """One BRDS-LSTM inference step — the accelerator datapath as one op:
+    the fused dual-ratio SpMV (the paper's Gate module) feeding the LSTM
+    nonlinearities (the Function module). x (B, X), h/c (B, H) with
+    sx/sh packed over the 4H gate rows. Returns (c, h).
+
+    This is the decode hot loop: the serving runtime scans it once per
+    generated token with the (c, h) cache donated."""
+    z = rb_dual_spmv(sx, x, sh, h_prev, bias, block_rows=block_rows,
+                     backend=backend)
+    H = z.shape[-1] // 4
+    return lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
+                      z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
+
+
 # ---------------------------------------------------------------- lstm cell
 
 def lstm_gates(zf, zi, zg, zo, c_prev, *, pwl: bool = False,

@@ -134,7 +134,8 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
                                    shape.seq_len)
             if arch.encdec:
                 fn = jax.jit(
-                    lambda p, t, f: model.prefill(p, t, f, shape.seq_len),
+                    lambda p, t, f: model.prefill(p, t, shape.seq_len,
+                                                  extra=f),
                     in_shardings=(p_sh, b_sh["tokens"], b_sh["frames"]),
                     out_shardings=(NamedSharding(mesh, P("data")), c_sh))
                 lowered = fn.lower(params_abs, specs["tokens"],
@@ -142,7 +143,7 @@ def build_cell(arch_name: str, shape_name: str, multi_pod: bool,
             elif arch.num_patches:
                 fn = jax.jit(
                     lambda p, t, pe: model.prefill(p, t, shape.seq_len,
-                                                   patch_embeds=pe),
+                                                   extra=pe),
                     in_shardings=(p_sh, b_sh["tokens"],
                                   b_sh["patch_embeds"]),
                     out_shardings=(NamedSharding(mesh, P("data")), c_sh))

@@ -1,11 +1,18 @@
-"""Serving driver: prefill + batched decode, dense vs BRDS-sparse weights.
+"""Serving driver: on-device batched decode, dense vs BRDS-sparse weights.
+
+Serves every DecodeStep model — the transformer zoo AND the paper's LSTMs
+(whose packed row-balanced kernels are exercised with --brds):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --prompt-len 64 --gen 32 --batch 4
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke --brds
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
+      --brds --continuous --slots 4
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -13,32 +20,82 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _build(args):
+    """→ (model, cfg, vocab_size, sparsity_policy, extra_fn) where
+    ``extra_fn(rng, batch)`` builds the family conditioning (encoder
+    frames, patch embeds) for a batch of that size, or None."""
+    from repro.models import LSTMModel, LSTM_CONFIGS
+
+    if args.arch in LSTM_CONFIGS:
+        cfg = LSTM_CONFIGS[args.arch]
+        if args.smoke:
+            cfg = dataclasses.replace(cfg, input_size=min(cfg.input_size, 128),
+                                      hidden=min(cfg.hidden, 128))
+        if not cfg.vocab_size:
+            raise SystemExit(f"{args.arch} is not a language model")
+        sparsity = None
+        if args.brds:
+            from repro.sparse import lstm_policy
+            sparsity = lstm_policy(args.spar_a, args.spar_b)
+        return (LSTMModel(cfg), cfg, cfg.vocab_size, sparsity,
+                lambda rng, batch: None)
+
+    from repro.configs import get_arch, smoke_config
+    from repro.models import build_model
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    model = build_model(cfg)
+    sparsity = None
+    if args.brds:
+        from repro.sparse import transformer_policy
+        sparsity = transformer_policy(args.spar_a, args.spar_b)
+
+    def extra_fn(rng, batch):
+        if cfg.encdec:
+            return jax.random.normal(rng, (batch, 32, cfg.d_model),
+                                     dtype=cfg.jdtype)
+        if cfg.num_patches:
+            return jax.random.normal(rng, (batch, cfg.num_patches,
+                                           cfg.d_model), dtype=cfg.jdtype)
+        return None
+
+    return model, cfg, cfg.vocab_size, sparsity, extra_fn
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--arch", default="qwen3-0.6b",
+                    help="transformer-zoo arch or lstm_ptb/lstm_timit/...")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--brds", action="store_true",
-                    help="row-balanced prune the FFN/attention weights first")
+                    help="row-balanced prune (and, for the LSTM, pack) "
+                         "the weights first")
     ap.add_argument("--spar-a", type=float, default=0.75)
     ap.add_argument("--spar-b", type=float, default=0.5)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "pallas", "ref"),
+                    help="sparse-kernel backend for packed decode")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=-1)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a ragged request stream through the "
+                         "continuous-batching scheduler instead of one "
+                         "lockstep batch")
+    ap.add_argument("--slots", type=int, default=4)
     args = ap.parse_args()
 
-    from repro.configs import get_arch, smoke_config
-    from repro.models import build_model
-    from repro.serving import ServeEngine
+    from repro.serving import (ServeEngine, ContinuousBatchingEngine,
+                               SamplingConfig)
+    from repro.sparse import set_default_backend
 
-    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
-    model = build_model(cfg)
+    set_default_backend(args.backend)
+    model, cfg, vocab, sparsity, extra_fn = _build(args)
     params = model.init(jax.random.key(0))
-    print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M")
-
-    sparsity = None
-    if args.brds:
-        from repro.sparse import transformer_policy
-        sparsity = transformer_policy(args.spar_a, args.spar_b)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n/1e6:.1f}M")
 
     max_len = args.prompt_len + args.gen
     eng = ServeEngine(model, cfg, max_len=max_len, batch=args.batch,
@@ -47,22 +104,37 @@ def main():
     if brds_report is not None:
         print("BRDS:", brds_report)
     rng = jax.random.key(1)
-    tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
-                                cfg.vocab_size)
-    extra = None
-    if cfg.encdec:
-        extra = jax.random.normal(rng, (args.batch, 32, cfg.d_model),
-                                  dtype=cfg.jdtype)
-    elif cfg.num_patches:
-        extra = jax.random.normal(rng, (args.batch, cfg.num_patches,
-                                        cfg.d_model), dtype=cfg.jdtype)
+    sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
+                              eos_id=args.eos_id)
 
+    if args.continuous:
+        sched = ContinuousBatchingEngine(model, params, slots=args.slots,
+                                         max_len=max_len, sampling=sampling)
+        lens = [max(4, args.prompt_len - 3 * i) for i in range(args.batch)]
+        for i, plen in enumerate(lens):
+            req_rng = jax.random.fold_in(rng, i)
+            prompt = jax.random.randint(req_rng, (1, plen), 0, vocab)
+            sched.submit(prompt, args.gen, extra=extra_fn(req_rng, 1))
+        t0 = time.time()
+        results = sched.run()
+        dt = time.time() - t0
+        total = sum(len(v) for v in results.values())
+        print(f"served {len(results)} ragged requests "
+              f"({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s, "
+              f"{sched.steps_dispatched} chunk dispatches)")
+        uid0 = min(results)
+        print("sample ids:", results[uid0][:16])
+        return
+
+    tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0, vocab)
+    extra = extra_fn(rng, args.batch)
     t0 = time.time()
-    out = eng.generate(params, tokens, args.gen, extra=extra)
+    out = eng.generate(params, tokens, args.gen, extra=extra,
+                       sampling=sampling, rng=jax.random.key(2))
     out.block_until_ready()
     dt = time.time() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
+          f"({args.batch * args.gen / dt:.1f} tok/s, one decode dispatch)")
     print("sample ids:", np.asarray(out[0][:16]))
 
 

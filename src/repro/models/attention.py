@@ -185,11 +185,14 @@ def full_attention(q, k, v, *, causal=True, window=None, q_offset=0):
 
 def decode_attention_einsum(q, k_cache, v_cache, length, window=None):
     """q: (B, 1, H, D) (post prepare_heads); caches (B, Smax, H, D);
-    length: scalar valid length. Returns (B, 1, H, D)."""
+    length: scalar valid length, or (B,) per-sequence lengths (continuous
+    batching over ragged sequences). Returns (B, 1, H, D)."""
     B, _, H, D = q.shape
     Smax = k_cache.shape[1]
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * D ** -0.5,
                    k_cache.astype(jnp.float32))
+    if getattr(length, "ndim", 0) == 1:
+        length = length.reshape(-1, 1, 1, 1)
     kpos = jnp.arange(Smax)[None, None, None, :]
     mask = kpos < length
     if window is not None:
@@ -273,20 +276,25 @@ def dequantize_cache(cache: dict, dtype):
 
 
 def kv_cache_update(cache: dict, k_new, v_new, pos):
-    """Insert k/v (B, S_new, Hkv, D) at position `pos` (scalar)."""
+    """Insert k/v (B, S_new, Hkv, D) at `pos` — a scalar (every sequence at
+    the same position) or an (B,) int vector of per-sequence positions
+    (continuous batching over ragged sequences; S_new must be 1)."""
+    if getattr(pos, "ndim", 0) == 1:
+        idx = jnp.arange(k_new.shape[0])
+
+        def ins(buf, new):
+            return buf.at[idx, pos].set(new[:, 0].astype(buf.dtype))
+    else:
+        def ins(buf, new):
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (0, pos, 0, 0))
     if "k_scale" in cache:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
         return {
-            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, pos, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, pos, 0, 0)),
-            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
-                                                    (0, pos, 0, 0)),
-            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
-                                                    (0, pos, 0, 0)),
+            "k": ins(cache["k"], kq),
+            "v": ins(cache["v"], vq),
+            "k_scale": ins(cache["k_scale"], ks),
+            "v_scale": ins(cache["v_scale"], vs),
         }
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, pos, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, pos, 0, 0))
-    return {"k": k, "v": v}
+    return {"k": ins(cache["k"], k_new), "v": ins(cache["v"], v_new)}

@@ -234,8 +234,13 @@ class EncDecLM:
         return L.init_params(self.cache_defs(batch, max_len),
                              jax.random.key(0))
 
-    def prefill(self, params, tokens, frames, max_len: int):
-        enc_out = self.encode(params, frames)
+    def prefill(self, params, tokens, max_len: int, extra=None):
+        """``extra`` is the encoder frame embeddings (B, S_enc, d) — the
+        DecodeStep contract's family-specific conditioning."""
+        if extra is None:
+            raise ValueError("EncDecLM.prefill needs encoder frames "
+                             "(extra=...)")
+        enc_out = self.encode(params, extra)
         cache = self.init_cache(tokens.shape[0], max_len)
         x = L.embed_apply(params["embed"], tokens)
         positions = jnp.arange(tokens.shape[1])[None, :]
@@ -247,7 +252,9 @@ class EncDecLM:
 
     def decode_step(self, params, cache, tokens, pos):
         x = L.embed_apply(params["embed"], tokens)
-        positions = jnp.full((1, 1), pos, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = (pos.reshape(-1, 1) if pos.ndim == 1
+                     else jnp.full((1, 1), pos, jnp.int32))
         x, new_dec = self._dec_blocks(params, x, positions, None, "decode",
                                       cache, pos)
         x = L.apply_norm(self.cfg.norm, params["final_norm"], x)

@@ -17,8 +17,8 @@ import jax.numpy as jnp
 
 from . import layers as L
 from ..core import sparsity as S
+from ..core.packing import RowBalancedSparse
 from ..kernels import ops as K
-from ..sparse import backend as SB
 from ..sparse import get_format, lstm_policy
 from ..sparse import mask_grads as _sparse_mask_grads
 
@@ -159,15 +159,25 @@ class LSTMModel:
                                "w_h": S.apply_mask(g["w_h"], m["w_h"])})
         return {**grads, "layers": new_layers}
 
-    def pack(self, params):
-        """Pack pruned layers into RowBalancedSparse pairs for serving
-        (packs the surviving non-zeros of each already-pruned weight)."""
+    def pack(self, params, masks: dict | None = None):
+        """Pack pruned layers into RowBalancedSparse pairs for serving.
+
+        ``masks`` is the {path: mask} dict from ``prune`` — packing from
+        the plan's masks keeps surviving weights that happen to be exactly
+        zero and preserves the row-balance accounting. With masks=None the
+        survivors are re-selected per row by magnitude at the maximum
+        per-row non-zero count (ties resolve to zeros, so rows stay
+        balanced even if some survivors vanished during retraining)."""
         fmt = get_format("row_balanced")
         packed = []
-        for lp in params["layers"]:
-            sx = fmt.pack(lp["w_x"], lp["w_x"] != 0)
-            sh = fmt.pack(lp["w_h"], lp["w_h"] != 0)
-            packed.append({"sx": sx, "sh": sh, "b": lp["b"]})
+        for i, lp in enumerate(params["layers"]):
+            entry = {"b": lp["b"]}
+            for key, out in (("w_x", "sx"), ("w_h", "sh")):
+                m = (masks or {}).get(f"layers/{i}/{key}")
+                if m is None:
+                    m = _survivor_mask(lp[key])
+                entry[out] = fmt.pack(lp[key], m)
+            packed.append(entry)
         return packed
 
     @staticmethod
@@ -180,27 +190,19 @@ class LSTMModel:
                     for lp in packed["layers"]]
         return packed
 
-    def sparse_step(self, packed, x_t, state, *, backend: str | None = None,
-                    use_kernel: bool | None = None):
+    def sparse_step(self, packed, x_t, state, *, backend: str | None = None):
         """One inference time step on the packed BRDS path.
 
         x_t (B, X); state: list of (c, h) per layer. The dual-ratio fused
         kernel is the accelerator's Gate module; lstm_gates is Function.
         ``packed`` is model.pack's per-layer list or a SparsityPlan.pack'd
         param tree."""
-        if use_kernel is not None:
-            backend = SB.from_use_kernel(use_kernel)
-        cfg = self.cfg
         new_state = []
         inp = x_t
         for lp, (c, h) in zip(self._packed_layers(packed), state):
-            z = K.rb_dual_spmv(lp["sx"], inp, lp["sh"], h, lp["b"],
-                               backend=backend)
-            H = cfg.hidden
-            c, h = K.lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
-                                z[:, 3 * H:], c,
-                                pwl=cfg.pwl_activations,
-                                backend=backend)
+            c, h = K.brds_lstm_step(lp["sx"], inp, lp["sh"], h, lp["b"], c,
+                                    pwl=self.cfg.pwl_activations,
+                                    backend=backend)
             new_state.append((c, h))
             inp = h
         return inp, new_state
@@ -222,6 +224,105 @@ class LSTMModel:
         return [(jnp.zeros((batch, cfg.hidden), cfg.dtype),
                  jnp.zeros((batch, cfg.hidden), cfg.dtype))
                 for _ in range(cfg.num_layers)]
+
+    # ------------------------------------------------------------- serving
+    # DecodeStep contract (repro.serving.runtime): the recurrent (c, h)
+    # pair per layer IS the decode cache. decode_step dispatches on the
+    # param leaves: SparsityPlan.pack'd trees (w_x/w_h are
+    # RowBalancedSparse) run the packed rb_dual_spmv + lstm_gates
+    # accelerator datapath; dense trees run the reference einsum step.
+    supports_packed_decode = True
+
+    @staticmethod
+    def is_packed(params) -> bool:
+        return isinstance(params["layers"][0]["w_x"], RowBalancedSparse)
+
+    def cache_defs(self, batch: int, max_len: int) -> dict:
+        """max_len is part of the contract but unused — state is O(1)."""
+        cfg = self.cfg
+        return {"layers": [
+            {"c": L.PSpec((batch, cfg.hidden), ("batch", "lstm_hidden"),
+                          init="zeros", dtype=cfg.dtype),
+             "h": L.PSpec((batch, cfg.hidden), ("batch", "lstm_hidden"),
+                          init="zeros", dtype=cfg.dtype)}
+            for _ in range(cfg.num_layers)]}
+
+    def init_cache(self, batch: int, max_len: int):
+        return L.init_params(self.cache_defs(batch, max_len),
+                             jax.random.key(0))
+
+    def _step(self, params, x_t, state):
+        """One time step, packed or dense by param type. state/new_state:
+        list of (c, h); returns (h_last, new_state) in cfg.dtype."""
+        cfg = self.cfg
+        packed = self.is_packed(params)
+        new_state = []
+        inp = x_t
+        for lp, (c, h) in zip(params["layers"], state):
+            if packed:
+                c, h = K.brds_lstm_step(lp["w_x"], inp, lp["w_h"], h,
+                                        lp["b"], c,
+                                        pwl=cfg.pwl_activations)
+            else:
+                z = (inp @ lp["w_x"].T + h @ lp["w_h"].T +
+                     lp["b"][None, :]).astype(jnp.float32)
+                c, h = self._cell(z, c, pwl=cfg.pwl_activations)
+            c, h = c.astype(cfg.dtype), h.astype(cfg.dtype)
+            new_state.append((c, h))
+            inp = h
+        return inp, new_state
+
+    def _head_logits(self, params, h):
+        """h (B, H) → logits (B, 1, V or C) fp32."""
+        return jnp.einsum("bh,hv->bv", h.astype(jnp.float32),
+                          params["head"]["w"].astype(jnp.float32))[:, None]
+
+    def _embed_step(self, params, tokens):
+        """tokens (B, 1) ids (LM) or (B, 1, X) features → x_t (B, X)."""
+        if self.cfg.vocab_size:
+            return L.embed_apply(params["embed"], tokens[:, 0])
+        return tokens[:, 0].astype(self.cfg.dtype)
+
+    def prefill(self, params, tokens, max_len: int, extra=None):
+        """Process a full prompt, build the (c, h) cache. Works on dense
+        and SparsityPlan.pack'd params. Returns (logits (B, 1, V), cache)."""
+        cfg = self.cfg
+        if cfg.vocab_size:
+            x = L.embed_apply(params["embed"], tokens)
+        else:
+            x = tokens.astype(cfg.dtype)
+        B = x.shape[0]
+        state = self.init_state(B)
+
+        def step(st, x_t):
+            h, st2 = self._step(params, x_t, st)
+            return tuple(st2), h
+
+        state, hs = jax.lax.scan(step, tuple(state), x.transpose(1, 0, 2))
+        logits = self._head_logits(params, hs[-1])
+        cache = {"layers": [{"c": c, "h": h} for c, h in state]}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step; pos accepted per the contract but unused."""
+        x_t = self._embed_step(params, tokens)
+        state = [(lp["c"], lp["h"]) for lp in cache["layers"]]
+        h, new_state = self._step(params, x_t, state)
+        logits = self._head_logits(params, h)
+        cache = {"layers": [{"c": c, "h": h} for c, h in new_state]}
+        return logits, cache
+
+
+def _survivor_mask(w) -> jnp.ndarray:
+    """Row-balanced keep-mask for an already-pruned dense weight: per-row
+    magnitude top-K at the maximum per-row non-zero count (zero-ties keep
+    every row at exactly K non-zeros)."""
+    import numpy as np
+    counts = np.asarray(jnp.sum(w != 0, axis=1))
+    k = int(counts.max()) if counts.size else 0
+    order = jnp.argsort(-jnp.abs(w), axis=1)[:, :k]
+    rows = jnp.broadcast_to(jnp.arange(w.shape[0])[:, None], order.shape)
+    return jnp.zeros(w.shape, bool).at[rows, order].set(True)
 
 
 # Paper benchmark configs (§5.1): TIMIT X=153 H=1024; PTB large 1500/1500;

@@ -275,7 +275,7 @@ def rwkv_time_mix_step(p: dict, x, state):
     kv = kb[..., :, None] * vb[..., None, :]      # (B, H, Dk, Dk)
     o = jnp.einsum("bhd,bhde->bhe", rb, S_prev + u[None, :, :, None] * kv)
     S_new = w[..., None] * S_prev + kv
-    o = _rwkv_out(p, o[:, None].transpose(0, 1, 2, 3), g)  # (B,1,H,Dk)→(B,1,d)
+    o = _rwkv_out(p, o[:, None], g)               # (B,1,H,Dk) → (B,1,d)
     return o, {"S": S_new, "x_tm": x[:, -1]}
 
 

@@ -296,11 +296,12 @@ class TransformerLM:
     def init_cache(self, batch: int, max_len: int):
         return L.init_params(self.cache_defs(batch, max_len), jax.random.key(0))
 
-    def prefill(self, params, tokens, max_len: int, patch_embeds=None):
-        """Process a full prompt, build the cache. Returns (logits_last, cache)."""
+    def prefill(self, params, tokens, max_len: int, extra=None):
+        """Process a full prompt, build the cache. ``extra`` is the VLM
+        patch embeds (DecodeStep contract). Returns (logits_last, cache)."""
         B, S = tokens.shape
         cache = self.init_cache(B, max_len)
-        x = self._embed_inputs(params, tokens, patch_embeds)
+        x = self._embed_inputs(params, tokens, extra)
         positions = jnp.arange(S)[None, :]
         x, new_cache, _ = self._run_blocks(params, x, positions, "prefill",
                                            cache, 0)
@@ -309,10 +310,13 @@ class TransformerLM:
         return logits, new_cache
 
     def decode_step(self, params, cache, tokens, pos):
-        """One decode step. tokens (B, 1); pos: scalar current position.
+        """One decode step. tokens (B, 1); pos: scalar current position or
+        (B,) per-sequence positions (continuous batching).
         Returns (logits (B, 1, V), new_cache)."""
         x = self._embed_inputs(params, tokens, None)
-        positions = jnp.full((1, 1), pos, jnp.int32)
+        pos = jnp.asarray(pos, jnp.int32)
+        positions = (pos.reshape(-1, 1) if pos.ndim == 1
+                     else jnp.full((1, 1), pos, jnp.int32))
         x, new_cache, _ = self._run_blocks(params, x, positions, "decode",
                                            cache, pos)
         x = L.apply_norm(self.cfg.norm, params["final_norm"], x)

@@ -1,1 +1,15 @@
+"""Serving stack: the DecodeStep contract, on-device decode, engines.
+
+- runtime   — the DecodeStep protocol + the scan-based decode_loop
+- sampling  — on-device greedy/temperature/top-k sampling with EOS
+- engine    — ServeEngine: sharded prefill + lockstep batched decode
+- scheduler — ContinuousBatchingEngine: slot-based request streaming
+"""
 from .engine import ServeEngine, cache_shardings
+from .runtime import DecodeStep, conforms, decode_loop
+from .sampling import SamplingConfig, sample
+from .scheduler import ContinuousBatchingEngine, Request, Finished
+
+__all__ = ["ServeEngine", "cache_shardings", "DecodeStep", "conforms",
+           "decode_loop", "SamplingConfig", "sample",
+           "ContinuousBatchingEngine", "Request", "Finished"]

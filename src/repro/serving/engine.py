@@ -1,9 +1,17 @@
-"""Serving engine: sharded prefill + lockstep batched decode.
+"""Serving engine: sharded prefill + on-device lockstep batched decode.
 
-serve_step (one new token against a KV/recurrent cache) is the unit the
-decode_* dry-run shapes lower. The engine jits prefill and decode with
-NamedShardings (cache: batch→data, heads→model) and runs greedy/temperature
-generation for the examples.
+The engine programs against the ``DecodeStep`` contract (runtime.py): any
+model with cache_defs / prefill / decode_step — the transformer zoo, the
+enc-dec, and the paper's LSTM — serves through the same code path.
+Generation is one jitted ``lax.scan`` (runtime.decode_loop) with the cache
+donated and sampling on device: one dispatch per generate call, zero
+per-token host syncs.
+
+``sparsity=`` is the repro.sparse seam: ``prepare(params)`` prunes to the
+policy's patterns and, for models that decode through packed kernels
+(``supports_packed_decode``, e.g. the LSTM's rb_dual_spmv + lstm_gates
+datapath), packs the surviving weights so serving exercises the BRDS
+accelerator path rather than masked-dense matmuls.
 """
 from __future__ import annotations
 
@@ -16,6 +24,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..training.train_loop import param_shardings
 from ..sharding import named_sharding
+from . import runtime
+from .sampling import SamplingConfig
 
 
 def cache_shardings(mesh: Mesh, model, batch: int, max_len: int):
@@ -31,66 +41,87 @@ def cache_shardings(mesh: Mesh, model, batch: int, max_len: int):
 
 
 class ServeEngine:
-    def __init__(self, model, cfg, mesh: Mesh | None = None,
+    def __init__(self, model, cfg=None, mesh: Mesh | None = None,
                  max_len: int = 2048, batch: int = 8, sparsity=None):
         """``sparsity`` is the repro.sparse seam: a SparsityPolicy (or an
         already-compiled SparsityPlan) applied to params via ``prepare``
         before serving — the BRDS deployment scenario."""
+        if not runtime.conforms(model):
+            raise TypeError(
+                f"{type(model).__name__} does not implement the DecodeStep "
+                "serving contract (cache_defs / prefill / decode_step)")
         self.model = model
         self.cfg = cfg
         self.mesh = mesh
         self.max_len = max_len
         self.batch = batch
         self.sparsity = sparsity
+        self._loops: dict = {}
         if mesh is not None:
-            p_sh = param_shardings(mesh, model)
-            c_sh = cache_shardings(mesh, model, batch, max_len)
-            b_sh = NamedSharding(mesh, P(("pod", "data") if "pod" in
-                                         mesh.axis_names else "data"))
-            scalar = NamedSharding(mesh, P())
-            self._decode = jax.jit(
-                model.decode_step,
-                in_shardings=(p_sh, c_sh, b_sh, scalar),
-                donate_argnums=(1,))
-        else:
-            self._decode = jax.jit(model.decode_step)
+            self._p_sh = param_shardings(mesh, model)
+            self._c_sh = cache_shardings(mesh, model, batch, max_len)
+            self._b_sh = NamedSharding(mesh, P(("pod", "data") if "pod" in
+                                               mesh.axis_names else "data"))
+            self._scalar = NamedSharding(mesh, P())
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("max_len",))
 
-    def prepare(self, params):
-        """Apply the engine's sparsity policy/plan to params (prune to the
-        policy's patterns). Returns (params, report) — report is None when
-        the engine is dense."""
+    def prepare(self, params, pack: bool | None = None):
+        """Apply the engine's sparsity policy/plan to params. Prunes to the
+        policy's patterns; when the model decodes through packed kernels
+        (``pack=None`` → ``model.supports_packed_decode``), the pruned
+        weights are additionally packed from the prune masks so decode runs
+        the row-balanced SpMV path. Returns (params, report) — report is
+        None when the engine is dense."""
         if self.sparsity is None:
             return params, None
         plan = (self.sparsity.compile(params)
                 if hasattr(self.sparsity, "compile") else self.sparsity)
         pruned, masks = plan.prune(params)
-        return pruned, plan.summary(masks)
+        report = plan.summary(masks)
+        if pack is None:
+            pack = getattr(self.model, "supports_packed_decode", False)
+        if pack:
+            packed, pack_report = plan.pack(pruned, masks)
+            return packed, {**report, **pack_report}
+        return pruned, report
+
+    # ------------------------------------------------------------ decode
+    def _loop(self, steps: int, sampling: SamplingConfig):
+        """One jitted scan-decode per (steps, sampling); cache donated."""
+        key = (steps, sampling)
+        if key not in self._loops:
+            def run(params, cache, logits, pos, rng):
+                return runtime.decode_loop(
+                    self.model, params, cache, logits, pos, rng, steps,
+                    sampling, limit=self.max_len)
+            if self.mesh is not None:
+                fn = jax.jit(run,
+                             in_shardings=(self._p_sh, self._c_sh,
+                                           self._b_sh, self._scalar,
+                                           self._scalar),
+                             donate_argnums=(1,))
+            else:
+                fn = jax.jit(run, donate_argnums=(1,))
+            self._loops[key] = fn
+        return self._loops[key]
 
     def generate(self, params, tokens, steps: int, *, extra=None,
-                 temperature: float = 0.0, rng=None):
-        """Greedy (or sampled) generation. tokens (B, S) prompt.
-        Returns (B, steps) generated ids."""
-        if self.cfg.encdec:
-            logits, cache = self._prefill(params, tokens, extra,
-                                          max_len=self.max_len)
-        elif extra is not None:
-            logits, cache = self._prefill(params, tokens,
-                                          max_len=self.max_len,
-                                          patch_embeds=extra)
-        else:
-            logits, cache = self._prefill(params, tokens,
-                                          max_len=self.max_len)
-        pos = tokens.shape[1]
-        out = []
-        for i in range(steps):
-            if temperature > 0 and rng is not None:
-                rng, k = jax.random.split(rng)
-                nxt = jax.random.categorical(k, logits[:, -1] / temperature)
-            else:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)
-            nxt = nxt[:, None].astype(jnp.int32)
-            out.append(nxt)
-            logits, cache = self._decode(params, cache, nxt, pos + i)
-        return jnp.concatenate(out, axis=1)
+                 temperature: float = 0.0, top_k: int = 0, eos_id: int = -1,
+                 rng=None, sampling: SamplingConfig | None = None):
+        """Generate ``steps`` tokens for a lockstep batch of prompts.
+
+        tokens (B, S) prompt; ``extra`` is family-specific conditioning
+        (encoder frames, patch embeds). Returns (B, steps) int32 ids —
+        finished sequences (per-sequence EOS) pad with ``sampling.pad_id``.
+        """
+        if sampling is None:
+            sampling = SamplingConfig(temperature=temperature, top_k=top_k,
+                                      eos_id=eos_id)
+        if rng is None:
+            rng = jax.random.key(0)
+        logits, cache = self._prefill(params, tokens, max_len=self.max_len,
+                                      extra=extra)
+        pos = jnp.int32(tokens.shape[1])
+        toks, _ = self._loop(steps, sampling)(params, cache, logits, pos, rng)
+        return toks

@@ -1,0 +1,100 @@
+"""The one decode contract every servable model family implements.
+
+``DecodeStep`` is the protocol the serving stack (ServeEngine, the
+continuous-batching scheduler, the dry-run decode shapes) programs against:
+
+  cache_defs(batch, max_len)            → PSpec pytree for the decode cache
+                                          (KV cache, recurrent state, LSTM
+                                          (c, h) — whatever the family keeps
+                                          per sequence)
+  init_cache(batch, max_len)            → concrete zeroed cache
+  prefill(params, tokens, max_len,
+          extra=None)                   → (last logits (B, 1, V), cache);
+                                          ``extra`` is family-specific
+                                          conditioning (VLM patch embeds,
+                                          enc-dec encoder frames)
+  decode_step(params, cache, tokens,
+              pos)                      → (logits (B, 1, V), cache); ``pos``
+                                          is a scalar (lockstep batch) or an
+                                          (B,) int32 vector of per-sequence
+                                          positions (continuous batching)
+
+``decode_loop`` is the generation engine built on that contract: a single
+``lax.scan`` over decode steps with sampling, per-sequence EOS/budget stop,
+and cache-position bookkeeping all on device — one dispatch per generate
+call, zero per-token host syncs.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from .sampling import SamplingConfig, sample
+
+__all__ = ["DecodeStep", "conforms", "decode_loop"]
+
+
+@runtime_checkable
+class DecodeStep(Protocol):
+    def cache_defs(self, batch: int, max_len: int) -> Any: ...
+
+    def init_cache(self, batch: int, max_len: int) -> Any: ...
+
+    def prefill(self, params, tokens, max_len: int, extra=None): ...
+
+    def decode_step(self, params, cache, tokens, pos): ...
+
+
+def conforms(model) -> bool:
+    """Whether ``model`` implements the DecodeStep serving contract."""
+    return isinstance(model, DecodeStep)
+
+
+def decode_loop(model, params, cache, logits, pos, rng, steps: int,
+                sampling: SamplingConfig, *, done=None, budget=None,
+                limit: int | None = None):
+    """Generate ``steps`` tokens on device with one ``lax.scan``.
+
+    logits: (B, 1, V) last-position logits from prefill (or a previous loop).
+    pos:    scalar next cache position (lockstep) or (B,) per-sequence
+            positions (continuous batching; frozen once a sequence is done).
+    done:   (B,) bool — sequences that start finished (inactive slots).
+    budget: (B,) int32 — per-sequence max tokens to emit this call.
+    limit:  cache capacity; sequences stop before writing past it.
+
+    Returns (tokens (B, steps) int32, state dict with the final
+    cache/logits/pos/rng/done/emitted carry) — everything needed to resume
+    the loop (the scheduler chains chunks this way).
+    """
+    B = logits.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_seq_pos = pos.ndim == 1
+    if done is None:
+        done = jnp.zeros((B,), bool)
+    emitted = jnp.zeros((B,), jnp.int32)
+
+    def body(carry, _):
+        cache, logits, rng, done, pos, emitted = carry
+        rng, k = jax.random.split(rng)
+        nxt = sample(k, logits[:, -1], sampling)
+        nxt = jnp.where(done, jnp.int32(sampling.pad_id), nxt)
+        emitted = emitted + jnp.where(done, 0, 1)
+        if sampling.stops:
+            done = done | (nxt == sampling.eos_id)
+        if budget is not None:
+            done = done | (emitted >= budget)
+        if limit is not None:
+            done = done | (pos + 1 >= limit)
+        logits, cache = model.decode_step(params, cache, nxt[:, None], pos)
+        # freeze positions of finished sequences (scalar: once all finish)
+        frozen = done if per_seq_pos else jnp.all(done)
+        pos2 = pos + jnp.where(frozen, 0, 1).astype(jnp.int32)
+        return (cache, logits, rng, done, pos2, emitted), nxt
+
+    carry = (cache, logits, rng, done, pos, emitted)
+    (cache, logits, rng, done, pos, emitted), toks = jax.lax.scan(
+        body, carry, None, length=steps)
+    return toks.T, dict(cache=cache, logits=logits, rng=rng, done=done,
+                        pos=pos, emitted=emitted)

@@ -1,0 +1,52 @@
+"""On-device token sampling for the decode loop.
+
+A ``SamplingConfig`` is a static (hashable) description of how to turn the
+last-position logits into the next token — it closes over no arrays, so it
+can key a jit cache and live inside a ``lax.scan`` body. ``sample`` itself
+is pure jnp: greedy argmax at temperature 0, otherwise temperature-scaled
+categorical, optionally restricted to the top-k logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingConfig", "sample"]
+
+_NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Static sampling parameters.
+
+    temperature: 0 → greedy argmax; >0 → categorical over logits/T.
+    top_k:       >0 → restrict sampling to the k largest logits.
+    eos_id:      ≥0 → sequences stop after emitting this id (the EOS token
+                 itself is emitted; later steps emit ``pad_id``).
+    pad_id:      filler id emitted by finished sequences.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    eos_id: int = -1
+    pad_id: int = 0
+
+    @property
+    def stops(self) -> bool:
+        return self.eos_id >= 0
+
+
+def sample(rng, logits, cfg: SamplingConfig):
+    """logits (B, V) → next-token ids (B,) int32. ``cfg`` is static, so the
+    greedy/top-k branches resolve at trace time."""
+    logits = logits.astype(jnp.float32)
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jax.lax.top_k(scaled, cfg.top_k)[0][..., -1:]
+        scaled = jnp.where(scaled < kth, _NEG, scaled)
+    return jax.random.categorical(rng, scaled).astype(jnp.int32)

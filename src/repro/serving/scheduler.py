@@ -1,0 +1,200 @@
+"""Slot-based continuous batching over the DecodeStep contract.
+
+ESE/Spartus-style request-level serving: instead of one lockstep batch that
+lives and dies together, the scheduler owns a fixed number of decode
+*slots* over one shared cache. Requests with ragged prompt lengths and
+ragged generation budgets stream through:
+
+  submit → queue → (slot free?) prefill the prompt at batch=1 →
+  join: write the prefilled cache/logits into the shared cache at the slot
+  → decode: all active slots step together in one on-device scan chunk
+  (per-slot cache positions — runtime.decode_loop with ``pos`` as a vector)
+  → evict: finished slots (EOS / budget / cache full) release and the next
+  queued request is admitted.
+
+The host syncs once per decode *chunk* (default 8 tokens), not per token;
+admission/eviction decisions ride on that boundary. Prefill is jitted per
+distinct prompt length (bucket prompts upstream if lengths are adversarial).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import runtime
+from .sampling import SamplingConfig
+
+__all__ = ["Request", "Finished", "ContinuousBatchingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: Any                 # (1, S) int32 tokens
+    max_new: int
+    extra: Any = None           # family-specific conditioning (frames, ...)
+
+
+@dataclasses.dataclass
+class Finished:
+    uid: int
+    tokens: np.ndarray          # emitted ids, EOS included if hit
+    prompt_len: int
+
+
+class ContinuousBatchingEngine:
+    """Continuous batching for any DecodeStep model.
+
+    ``params`` may be dense, pruned, or SparsityPlan.pack'd — the model's
+    decode_step dispatches (the BRDS LSTM runs rb_dual_spmv + lstm_gates on
+    packed params).
+    """
+
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 sampling: SamplingConfig = SamplingConfig(),
+                 chunk: int = 8, seed: int = 0):
+        if not runtime.conforms(model):
+            raise TypeError(
+                f"{type(model).__name__} does not implement the DecodeStep "
+                "serving contract (cache_defs / prefill / decode_step)")
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.sampling = sampling
+        self.chunk = chunk
+
+        self.cache = model.init_cache(slots, max_len)
+        # per-leaf batch axis: cache leaves may be layer-stacked (scanned
+        # blocks put 'layers' ahead of 'batch'), so the slot join can't
+        # assume axis 0 — the cache defs carry the logical axis names.
+        from ..models import layers as L
+        self._batch_axes = jax.tree.map(
+            lambda d: d.axes.index("batch"),
+            model.cache_defs(slots, max_len), is_leaf=L.is_pspec)
+        self.pos = jnp.zeros((slots,), jnp.int32)
+        self.logits = None                      # (slots, 1, V), lazy init
+        self.rng = jax.random.key(seed)
+
+        self._queue: deque[Request] = deque()
+        self._slot_uid: list[int | None] = [None] * slots
+        self._slot_prompt_len = [0] * slots
+        self._remaining = np.zeros(slots, np.int64)
+        self._collected: dict[int, list[int]] = {}
+        self._next_uid = 0
+        self.steps_dispatched = 0               # device dispatches (chunks)
+
+        self._prefill = jax.jit(model.prefill, static_argnames=("max_len",))
+        self._join = jax.jit(self._join_impl, donate_argnums=(0, 1, 2))
+        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1,))
+
+    # ------------------------------------------------------------- device
+    def _join_impl(self, cache, logits, pos, pre_cache, pre_logits, slot,
+                   prompt_len):
+        """Write a batch=1 prefill result into shared state at ``slot``."""
+        def upd(c, p, ax):
+            starts = tuple(slot if i == ax else 0 for i in range(c.ndim))
+            return jax.lax.dynamic_update_slice(c, p.astype(c.dtype), starts)
+
+        cache = jax.tree.map(upd, cache, pre_cache, self._batch_axes)
+        logits = jax.lax.dynamic_update_index_in_dim(
+            logits, pre_logits[0].astype(logits.dtype), slot, 0)
+        pos = pos.at[slot].set(prompt_len)
+        return cache, logits, pos
+
+    def _chunk_impl(self, params, cache, logits, pos, rng, done, budget):
+        return runtime.decode_loop(
+            self.model, params, cache, logits, pos, rng, self.chunk,
+            self.sampling, done=done, budget=budget, limit=self.max_len)
+
+    # -------------------------------------------------------------- admit
+    def submit(self, prompt, max_new: int, extra=None) -> int:
+        """Queue one request. prompt: (S,) or (1, S) int tokens."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.ndim == 1:
+            prompt = prompt[None, :]
+        if prompt.shape[1] >= self.max_len:
+            raise ValueError(f"prompt length {prompt.shape[1]} ≥ max_len "
+                             f"{self.max_len}")
+        uid = self._next_uid
+        self._next_uid += 1
+        self._queue.append(Request(uid, prompt, max_new, extra))
+        self._collected[uid] = []
+        return uid
+
+    @property
+    def active_slots(self) -> list[int]:
+        return [s for s, u in enumerate(self._slot_uid) if u is not None]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self._slot_uid[slot] is not None or not self._queue:
+                continue
+            req = self._queue.popleft()
+            plen = req.prompt.shape[1]
+            lp, pre_cache = self._prefill(self.params, req.prompt,
+                                          max_len=self.max_len,
+                                          extra=req.extra)
+            if self.logits is None:
+                self.logits = jnp.zeros((self.slots,) + lp.shape[1:],
+                                        lp.dtype)
+            self.cache, self.logits, self.pos = self._join(
+                self.cache, self.logits, self.pos, pre_cache, lp,
+                jnp.int32(slot), jnp.int32(plen))
+            self._slot_uid[slot] = req.uid
+            self._slot_prompt_len[slot] = plen
+            # cap the budget at the cache capacity left after the prompt
+            self._remaining[slot] = min(req.max_new, self.max_len - plen)
+
+    # -------------------------------------------------------------- decode
+    def step(self) -> list[Finished]:
+        """Admit queued requests, decode one chunk, evict finished slots.
+        Returns the requests that completed this step."""
+        self._admit()
+        active = self.active_slots
+        if not active:
+            return []
+        done0 = jnp.asarray(
+            [u is None for u in self._slot_uid], bool)
+        budget = jnp.asarray(np.maximum(self._remaining, 0), jnp.int32)
+        toks, st = self._chunk_fn(self.params, self.cache, self.logits,
+                                  self.pos, self.rng, done0, budget)
+        self.cache, self.logits = st["cache"], st["logits"]
+        self.pos, self.rng = st["pos"], st["rng"]
+        self.steps_dispatched += 1
+
+        toks_np = np.asarray(toks)              # the one host sync per chunk
+        finished: list[Finished] = []
+        for slot in active:
+            uid = self._slot_uid[slot]
+            out = self._collected[uid]
+            for t in toks_np[slot]:
+                if self._remaining[slot] <= 0:
+                    break
+                out.append(int(t))
+                self._remaining[slot] -= 1
+                if self.sampling.stops and int(t) == self.sampling.eos_id:
+                    self._remaining[slot] = 0
+            if self._remaining[slot] <= 0:
+                finished.append(Finished(uid, np.asarray(out, np.int32),
+                                         self._slot_prompt_len[slot]))
+                self._slot_uid[slot] = None     # evict: slot is reusable
+        return finished
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive until queue and slots drain. Returns {uid: tokens}."""
+        results: dict[int, np.ndarray] = {}
+        while self._queue or self.active_slots:
+            for fin in self.step():
+                results[fin.uid] = fin.tokens
+        return results

@@ -62,11 +62,12 @@ def test_decode_matches_forward(name):
     tokens = batch["tokens"]
     if cfg.encdec:
         full, _ = model.forward(params, tokens, batch["frames"])
-        lp, cache = model.prefill(params, tokens[:, :S - 3], batch["frames"], S)
+        lp, cache = model.prefill(params, tokens[:, :S - 3], S,
+                                  extra=batch["frames"])
     elif cfg.num_patches:
         full, _ = model.forward(params, tokens, batch["patch_embeds"])
         lp, cache = model.prefill(params, tokens[:, :S - 3], S,
-                                  patch_embeds=batch["patch_embeds"])
+                                  extra=batch["patch_embeds"])
     else:
         full, _ = model.forward(params, tokens)
         lp, cache = model.prefill(params, tokens[:, :S - 3], S)

@@ -41,7 +41,7 @@ def test_lstm_trains(setup):
 def test_dense_sparse_step_equivalence(setup):
     cfg, model, params, ds = setup
     pruned, masks = model.prune(params, 0.7, 0.4)
-    packed = model.pack(pruned)
+    packed = model.pack(pruned, masks)
     # sparsity of packed matches requested ratios (within rounding)
     assert abs(packed[0]["sx"].sparsity - 0.7) < 0.05
     assert abs(packed[0]["sh"].sparsity - 0.4) < 0.05
