@@ -19,5 +19,19 @@ def time_call(fn, *args, warmup=2, iters=5):
     return ts[len(ts) // 2] * 1e6
 
 
+def time_fn(fn, warmup=1, iters=3):
+    """Median wall time per call in seconds for a no-arg callable
+    (compiles on the warmup calls)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")

@@ -9,7 +9,10 @@ The flow is policy → plan → pack:
      row-balanced format (values + relative-address deltas);
   5. the packed tree runs the sparse inference path (the Pallas
      rb_dual_spmv + lstm_gates kernels — the backend is configured once on
-     the policy: "pallas" | "ref" | "auto").
+     the policy: "pallas" | "ref" | "auto");
+  6. optionally, an activation rule (DeltaGateConfig) adds Spartus-style
+     temporal sparsity on top: decode steps skip the matvec columns whose
+     activation delta stayed under a threshold Θ.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -18,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import LSTMModel, LSTMConfig
-from repro.sparse import SparsityPolicy
+from repro.sparse import DeltaGateConfig, SparsityPolicy, delta_threshold
 
 # the paper's TIMIT-shaped layer: X=153 inputs, H=1024 hidden
 cfg = LSTMConfig("demo", input_size=153, hidden=1024, num_classes=61,
@@ -55,3 +58,16 @@ print("dense vs packed-sparse (pallas) max err:",
       float(jnp.abs(h_dense - h_sparse).max()))
 print("pallas vs ref backend max err:",
       float(jnp.abs(h_sparse - h_ref).max()))
+
+# temporal delta sparsity (Spartus-style): between steps, only the input
+# components whose delta crossed Θ fire — their count is the occupancy the
+# delta kernels' effective-ops reduction comes from. Declared on the policy
+# (lstm_policy(..., delta=DeltaGateConfig(...))) and wired into serving by
+# ServeEngine.prepare; shown here on a raw pair of steps.
+x2 = x + jnp.asarray(np.random.default_rng(1).normal(scale=0.05,
+                                                     size=x.shape),
+                     jnp.float32)
+cfgd = DeltaGateConfig(theta_x=0.05, theta_h=0.02, cap_x=0.5)
+_, fired, _ = delta_threshold(x2, x, theta=cfgd.theta_x, cap=cfgd.cap_x)
+print(f"delta config {cfgd}: step-2 input occupancy "
+      f"{float(fired.mean()):.1%} (columns firing at Θ={cfgd.theta_x})")

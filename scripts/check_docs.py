@@ -1,0 +1,83 @@
+"""Link-check the repo's markdown docs (stdlib only, CI-friendly).
+
+Walks README.md + docs/**/*.md, extracts markdown links and inline code
+paths, and verifies that:
+
+  - relative link targets exist on disk (anchors are stripped);
+  - intra-repo anchor links (#section) point at a heading in the target
+    file (GitHub slug rules, simplified);
+  - repo paths named in the docs' code spans (src/..., benchmarks/...,
+    docs/..., examples/..., scripts/..., tests/...) exist.
+
+External (http/https/mailto) targets are skipped — CI must not depend on
+the network. Exits non-zero listing every broken reference.
+
+  python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODESPAN = re.compile(r"`([A-Za-z0-9_./-]+)`")
+CODE_PREFIXES = ("src/", "benchmarks/", "docs/", "examples/", "scripts/",
+                 "tests/")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (simplified: lowercase, drop punctuation,
+    spaces → dashes)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\s-]", "", s)
+    return re.sub(r"\s+", "-", s).strip("-")
+
+
+def _anchors(md: pathlib.Path) -> set[str]:
+    out = set()
+    for line in md.read_text().splitlines():
+        if line.startswith("#"):
+            out.add(_slug(line.lstrip("#")))
+    return out
+
+
+def check_file(md: pathlib.Path) -> list[str]:
+    errors = []
+    text = md.read_text()
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, anchor = target.partition("#")
+        dest = (md.parent / path_part).resolve() if path_part else md
+        if path_part and not dest.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link → {target}")
+            continue
+        if anchor and dest.suffix == ".md" and dest.exists():
+            if anchor not in _anchors(dest):
+                errors.append(f"{md.relative_to(ROOT)}: missing anchor "
+                              f"#{anchor} in {dest.relative_to(ROOT)}")
+    for span in CODESPAN.findall(text):
+        if span.startswith(CODE_PREFIXES):
+            if not (ROOT / span).exists():
+                errors.append(f"{md.relative_to(ROOT)}: named path does not "
+                              f"exist → {span}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("**/*.md"))
+    errors = []
+    for md in files:
+        if md.exists():
+            errors.extend(check_file(md))
+    for e in errors:
+        print(f"ERROR: {e}")
+    print(f"check_docs: {len(files)} files, {len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

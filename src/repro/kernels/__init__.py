@@ -6,6 +6,8 @@ public wrappers (interpret=True on CPU, compiled on TPU).
 from .ops import (
     rb_spmv,
     rb_dual_spmv,
+    delta_rb_spmv,
+    delta_rb_dual_spmv,
     lstm_gates,
     flash_attention,
     decode_attention,

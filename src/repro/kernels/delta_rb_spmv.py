@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: temporal-delta SpMV over packed row-balanced weights.
+
+This is the Spartus [Gao et al., 2021] composition on top of the BRDS
+Gate-module MxV: the activation vector is a *delta* against a reference
+state, thresholded on the host side into a fired-column mask, and the
+kernel accumulates only (surviving row, changed column) products into the
+partial-sum memory ``m``:
+
+    m'[b, r] = m[b, r] + Σ_k vals[r, k] · fired[b, c] · d[b, c],
+               c = cols[r, k]
+
+- the weight side stays the paper's row-balanced packing (exactly K
+  non-zeros per row, values + narrow delta-encoded column indices), so
+  every grid step still does identical work per row — the balanced-PE
+  invariant survives the temporal composition;
+- the activation side gathers BOTH the delta vector and its fired mask
+  from VMEM; a column that did not cross the threshold Θ contributes an
+  exact 0.0 to the accumulation — the product a real delta accelerator
+  would never issue.  The occupancy (fired fraction) is the effective-ops
+  metric `benchmarks/fig_delta_occupancy.py` sweeps;
+- the dual variant processes the W_x and W_h packed families in the SAME
+  grid step (the Large/Small mult-array lockstep of rb_dual_spmv) and
+  fuses the partial-sum update, so one kernel launch advances the whole
+  temporal gate preactivation.
+
+Used on the memory-bound decode path: weight bytes already shrink by
+(1 - weight sparsity); firing columns shrink the *compute* by the delta
+occupancy — the two ratios multiply into the effective-ops reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rb_spmv import DEF_BLOCK_ROWS
+
+
+def _delta_rb_spmv_kernel(d_ref, f_ref, vals_ref, deltas_ref, out_ref):
+    """Grid step: one block of rows. d/f (B, X); vals/deltas (bR, K);
+    out_ref (B, bR)."""
+    cols = jnp.cumsum(deltas_ref[...].astype(jnp.int32), axis=1)   # (bR, K)
+    dm = d_ref[...].astype(jnp.float32) * f_ref[...]               # (B, X)
+    g = jnp.take(dm, cols, axis=1)                                 # (B, bR, K)
+    v = vals_ref[...].astype(jnp.float32)                          # (bR, K)
+    acc = jnp.sum(g * v[None, :, :], axis=-1)                      # (B, bR)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def delta_rb_spmv(values, deltas, d, fired, *,
+                  block_rows: int = DEF_BLOCK_ROWS, interpret: bool = True):
+    """y[b, r] = Σ_k values[r, k] · fired[b, c] · d[b, c], c = cols[r, k].
+
+    values: (R, K) float; deltas: (R, K) int8/16/32; d: (B, X) raw
+    activation deltas; fired: (B, X) float32 0/1 threshold-crossing mask.
+    Returns (B, R) in d.dtype. R must be a multiple of block_rows (the ops
+    wrapper pads).
+    """
+    R, K = values.shape
+    B, X = d.shape
+    assert fired.shape == (B, X), (fired.shape, d.shape)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _delta_rb_spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, X), lambda i: (0, 0)),
+            pl.BlockSpec((B, X), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, R), d.dtype),
+        interpret=interpret,
+    )(d, fired, values, deltas)
+
+
+def _delta_rb_dual_kernel(dx_ref, fx_ref, dh_ref, fh_ref, vx_ref, ix_ref,
+                          vh_ref, ih_ref, m_ref, out_ref):
+    """One row block of m' = m + Sx@(fx·dx) + Sh@(fh·dh). Both packed
+    families advance in the same step (Large/Small MA lockstep)."""
+    colsx = jnp.cumsum(ix_ref[...].astype(jnp.int32), axis=1)
+    colsh = jnp.cumsum(ih_ref[...].astype(jnp.int32), axis=1)
+    dx = dx_ref[...].astype(jnp.float32) * fx_ref[...]
+    dh = dh_ref[...].astype(jnp.float32) * fh_ref[...]
+    gx = jnp.take(dx, colsx, axis=1)                               # (B,bR,Kx)
+    gh = jnp.take(dh, colsh, axis=1)                               # (B,bR,Kh)
+    accx = jnp.sum(gx * vx_ref[...].astype(jnp.float32)[None], axis=-1)
+    acch = jnp.sum(gh * vh_ref[...].astype(jnp.float32)[None], axis=-1)
+    m = m_ref[...].astype(jnp.float32) + accx + acch
+    out_ref[...] = m.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def delta_rb_dual_spmv(vals_x, deltas_x, dx, fx, vals_h, deltas_h, dh, fh,
+                       m, *, block_rows: int = DEF_BLOCK_ROWS,
+                       interpret: bool = True):
+    """m' = m + Sx @ (fx·dx) + Sh @ (fh·dh) for packed row-balanced
+    Sx (R, Kx), Sh (R, Kh).
+
+    dx: (B, X), dh: (B, H) raw deltas; fx/fh their float32 fired masks;
+    m: (B, R) partial-sum memory. Returns (B, R) in m.dtype."""
+    R, Kx = vals_x.shape
+    _, Kh = vals_h.shape
+    B, X = dx.shape
+    H = dh.shape[1]
+    assert vals_h.shape[0] == R and m.shape == (B, R)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _delta_rb_dual_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, X), lambda i: (0, 0)),
+            pl.BlockSpec((B, X), lambda i: (0, 0)),
+            pl.BlockSpec((B, H), lambda i: (0, 0)),
+            pl.BlockSpec((B, H), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, Kx), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Kx), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Kh), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Kh), lambda i: (i, 0)),
+            pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, R), m.dtype),
+        interpret=interpret,
+    )(dx, fx, dh, fh, vals_x, deltas_x, vals_h, deltas_h, m)

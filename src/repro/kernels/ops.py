@@ -16,6 +16,8 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .rb_spmv import rb_spmv as _rb_spmv_kernel, rb_dual_spmv as _rb_dual_kernel
+from .delta_rb_spmv import (delta_rb_spmv as _delta_rb_spmv_kernel,
+                            delta_rb_dual_spmv as _delta_rb_dual_kernel)
 from .lstm_gates import lstm_gates as _lstm_gates_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .decode_attention import decode_attention as _decode_kernel
@@ -75,6 +77,64 @@ def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
     z = _rb_dual_kernel(vx, dx, x, vh, dh, h, b, block_rows=block_rows,
                         interpret=on_cpu())
     return z[:, :R] if padded else z
+
+
+def delta_rb_spmv(s: RowBalancedSparse, d, fired, *, block_rows: int = 256,
+                  backend: str | None = None):
+    """Temporal-delta SpMV: y[b, r] = Σ_k vals[r, k] · fired[b, c] · d[b, c].
+
+    ``d`` (B, ncols) raw activation deltas, ``fired`` (B, ncols) bool/0-1
+    threshold mask. Returns (B, rows)."""
+    fired = fired.astype(jnp.float32)
+    if _resolve(backend, None) == "ref":
+        return _ref.delta_rb_spmv_ref(s, d, fired)
+    R = s.rows
+    block_rows = min(block_rows, R)
+    vals, padded = _pad_rows(s.values, block_rows)
+    deltas, _ = _pad_rows(s.deltas, block_rows)
+    y = _delta_rb_spmv_kernel(vals, deltas, d, fired, block_rows=block_rows,
+                              interpret=on_cpu())
+    return y[:, :R] if padded else y
+
+
+def delta_rb_dual_spmv(sx: RowBalancedSparse, dx, fx,
+                       sh: RowBalancedSparse, dh, fh, m, *,
+                       block_rows: int = 256, backend: str | None = None):
+    """m' = m + Sx@(fx·dx) + Sh@(fh·dh) — the fused temporal-delta gate
+    accumulation (partial-sum memory update)."""
+    fx = fx.astype(jnp.float32)
+    fh = fh.astype(jnp.float32)
+    if _resolve(backend, None) == "ref":
+        return _ref.delta_rb_dual_spmv_ref(sx, dx, fx, sh, dh, fh, m)
+    R = sx.rows
+    block_rows = min(block_rows, R)
+    vx, padded = _pad_rows(sx.values, block_rows)
+    dxi, _ = _pad_rows(sx.deltas, block_rows)
+    vh, _ = _pad_rows(sh.values, block_rows)
+    dhi, _ = _pad_rows(sh.deltas, block_rows)
+    mp = jnp.pad(m, ((0, 0), (0, vx.shape[0] - R))) if padded else m
+    z = _delta_rb_dual_kernel(vx, dxi, dx, fx, vh, dhi, dh, fh, mp,
+                              block_rows=block_rows, interpret=on_cpu())
+    return z[:, :R] if padded else z
+
+
+def brds_delta_lstm_step(sx: RowBalancedSparse, dx, fx,
+                         sh: RowBalancedSparse, dh, fh, m_prev, bias, c_prev,
+                         *, pwl: bool = False, block_rows: int = 256,
+                         backend: str | None = None):
+    """One temporally-sparse BRDS-LSTM inference step.
+
+    The Spartus composition of the accelerator datapath: the fused delta
+    dual-SpMV advances the partial-sum memory ``m`` with only the fired
+    columns' products, the bias is applied on top, and the Function module
+    (lstm_gates) produces the new cell state. Returns (c, h, m)."""
+    m = delta_rb_dual_spmv(sx, dx, fx, sh, dh, fh, m_prev,
+                           block_rows=block_rows, backend=backend)
+    z = m.astype(jnp.float32) + bias.astype(jnp.float32)[None, :]
+    H = z.shape[-1] // 4
+    c, h = lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
+                      z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
+    return c, h, m
 
 
 def brds_lstm_step(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h_prev,

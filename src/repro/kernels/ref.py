@@ -36,6 +36,37 @@ def rb_dual_spmv_ref(sx: RowBalancedSparse, x: jnp.ndarray,
     return z.astype(x.dtype)
 
 
+# ----------------------------------------------------------- delta_rb_spmv
+
+def delta_rb_spmv_ref(s: RowBalancedSparse, d: jnp.ndarray,
+                      fired: jnp.ndarray) -> jnp.ndarray:
+    """Temporal-delta SpMV: y[b, r] = Σ_k vals[r, k] · fired[b, c] · d[b, c].
+
+    ``d`` (B, ncols) is a raw activation delta, ``fired`` its 0/1
+    threshold-crossing mask (Spartus-style temporal sparsity): columns that
+    did not fire contribute an exact 0.0 — the products a delta accelerator
+    skips. Equivalent to ``rb_spmv_ref(s, fired * d)``.
+    """
+    return rb_spmv_ref(s, (d.astype(jnp.float32)
+                           * fired.astype(jnp.float32)).astype(d.dtype))
+
+
+def delta_rb_dual_spmv_ref(sx: RowBalancedSparse, dx: jnp.ndarray,
+                           fx: jnp.ndarray, sh: RowBalancedSparse,
+                           dh: jnp.ndarray, fh: jnp.ndarray,
+                           m: jnp.ndarray) -> jnp.ndarray:
+    """Fused temporal-delta gate update: m' = m + Sx@(fx·dx) + Sh@(fh·dh).
+
+    ``m`` (B, 4H) is the partial-sum memory carried across decode steps;
+    the bias is NOT folded in (the caller adds it once per step on top of
+    m', keeping m a pure accumulation of delta contributions).
+    """
+    z = (m.astype(jnp.float32)
+         + delta_rb_spmv_ref(sx, dx, fx).astype(jnp.float32)
+         + delta_rb_spmv_ref(sh, dh, fh).astype(jnp.float32))
+    return z.astype(m.dtype)
+
+
 # ---------------------------------------------------------------- lstm cell
 
 def pwl_tables(n_seg: int = 16, lo: float = -8.0, hi: float = 8.0):

@@ -26,6 +26,9 @@ def _build(args):
     frames, patch embeds) for a batch of that size, or None."""
     from repro.models import LSTMModel, LSTM_CONFIGS
 
+    if args.delta is None and (args.delta_h is not None
+                               or args.occupancy is not None):
+        raise SystemExit("--delta-h/--occupancy require --delta")
     if args.arch in LSTM_CONFIGS:
         cfg = LSTM_CONFIGS[args.arch]
         if args.smoke:
@@ -34,12 +37,26 @@ def _build(args):
         if not cfg.vocab_size:
             raise SystemExit(f"{args.arch} is not a language model")
         sparsity = None
-        if args.brds:
-            from repro.sparse import lstm_policy
-            sparsity = lstm_policy(args.spar_a, args.spar_b)
+        if args.brds or args.delta is not None:
+            from repro.sparse import lstm_policy, DeltaGateConfig
+            delta = None
+            if args.delta is not None:
+                delta = DeltaGateConfig(
+                    theta_x=args.delta,
+                    theta_h=args.delta_h if args.delta_h is not None
+                    else args.delta,
+                    cap_x=args.occupancy, cap_h=args.occupancy)
+            # ratio 0 compiles to an empty weight plan, so --delta without
+            # --brds serves dense weights with temporal skipping only
+            sparsity = lstm_policy(args.spar_a if args.brds else 0.0,
+                                   args.spar_b if args.brds else 0.0,
+                                   delta=delta)
         return (LSTMModel(cfg), cfg, cfg.vocab_size, sparsity,
                 lambda rng, batch: None)
 
+    if args.delta is not None:
+        raise SystemExit("--delta is LSTM-only (temporal sparsity rides "
+                         "the recurrent decode cache)")
     from repro.configs import get_arch, smoke_config
     from repro.models import build_model
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
@@ -74,6 +91,16 @@ def main():
                          "the weights first")
     ap.add_argument("--spar-a", type=float, default=0.75)
     ap.add_argument("--spar-b", type=float, default=0.5)
+    ap.add_argument("--delta", type=float, default=None, metavar="THETA",
+                    help="LSTM only: serve with Spartus-style temporal "
+                         "delta sparsity at threshold THETA (0 = exact; "
+                         "composes with --brds packed weights)")
+    ap.add_argument("--delta-h", type=float, default=None,
+                    help="separate recurrent-path threshold "
+                         "(default: same as --delta)")
+    ap.add_argument("--occupancy", type=float, default=None, metavar="CAP",
+                    help="cap the fired-column fraction per step "
+                         "(hardware worst-case bound)")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="sparse-kernel backend for packed decode")
@@ -108,7 +135,8 @@ def main():
                               eos_id=args.eos_id)
 
     if args.continuous:
-        sched = ContinuousBatchingEngine(model, params, slots=args.slots,
+        # eng.model carries the delta wiring applied by prepare
+        sched = ContinuousBatchingEngine(eng.model, params, slots=args.slots,
                                          max_len=max_len, sampling=sampling)
         lens = [max(4, args.prompt_len - 3 * i) for i in range(args.batch)]
         for i, plen in enumerate(lens):
@@ -122,6 +150,17 @@ def main():
         print(f"served {len(results)} ragged requests "
               f"({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s, "
               f"{sched.steps_dispatched} chunk dispatches)")
+        if args.delta is not None:
+            from repro.sparse import occupancy_report
+            occ = occupancy_report(
+                sched.cache, steps=sched.slot_steps,
+                packed=params if args.brds else None)
+            line = (f"delta: occupancy x={occ['occupancy_x']:.1%} "
+                    f"h={occ['occupancy_h']:.1%}")
+            if "ops_reduction" in occ:
+                line += (f", effective-ops reduction "
+                         f"{occ['ops_reduction']:.2f}x")
+            print(line + " (final slot residents)")
         uid0 = min(results)
         print("sample ids:", results[uid0][:16])
         return
@@ -129,12 +168,23 @@ def main():
     tokens = jax.random.randint(rng, (args.batch, args.prompt_len), 0, vocab)
     extra = extra_fn(rng, args.batch)
     t0 = time.time()
-    out = eng.generate(params, tokens, args.gen, extra=extra,
-                       sampling=sampling, rng=jax.random.key(2))
+    out, state = eng.generate(params, tokens, args.gen, extra=extra,
+                              sampling=sampling, rng=jax.random.key(2),
+                              return_state=True)
     out.block_until_ready()
     dt = time.time() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s, one decode dispatch)")
+    if args.delta is not None:
+        from repro.sparse import occupancy_report
+        occ = occupancy_report(
+            state["cache"], steps=args.prompt_len + args.gen,
+            packed=params if args.brds else None)
+        line = (f"delta: occupancy x={occ['occupancy_x']:.1%} "
+                f"h={occ['occupancy_h']:.1%}")
+        if "ops_reduction" in occ:
+            line += f", effective-ops reduction {occ['ops_reduction']:.2f}x"
+        print(line)
     print("sample ids:", np.asarray(out[0][:16]))
 
 

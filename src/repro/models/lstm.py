@@ -21,6 +21,7 @@ from ..core.packing import RowBalancedSparse
 from ..kernels import ops as K
 from ..sparse import get_format, lstm_policy
 from ..sparse import mask_grads as _sparse_mask_grads
+from ..sparse.temporal import delta_threshold
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,8 +38,24 @@ class LSTMConfig:
 
 
 class LSTMModel:
-    def __init__(self, cfg: LSTMConfig):
+    """The paper's LSTM behind every surface of the stack.
+
+    ``delta`` (a ``repro.sparse.DeltaGateConfig`` or None) switches the
+    serving path to Spartus-style temporal sparsity: the DecodeStep cache
+    grows per-layer reference states (x_ref, h_ref), a partial-sum memory
+    m, and fired-column counters (nx, nh), and prefill/decode step through
+    ``_delta_step`` — only columns whose activation delta crossed Θ
+    contribute matvec products (``kernels.ops.delta_rb_spmv`` on packed
+    params, masked einsum on dense ones)."""
+
+    def __init__(self, cfg: LSTMConfig, delta=None):
         self.cfg = cfg
+        self.delta = delta
+
+    def with_delta(self, delta) -> "LSTMModel":
+        """Copy of this model serving through the temporal-delta path
+        (``delta``: a DeltaGateConfig, or None to disable)."""
+        return LSTMModel(self.cfg, delta=delta)
 
     # ------------------------------------------------------------- params
     def param_defs(self) -> dict:
@@ -238,14 +255,39 @@ class LSTMModel:
         return isinstance(params["layers"][0]["w_x"], RowBalancedSparse)
 
     def cache_defs(self, batch: int, max_len: int) -> dict:
-        """max_len is part of the contract but unused — state is O(1)."""
+        """Decode-cache declaration (a PSpec pytree).
+
+        ``max_len`` is part of the contract but unused — state is O(1).
+        With temporal sparsity enabled the cache additionally carries, per
+        layer: the reference states ``x_ref`` (B, X_in) / ``h_ref``
+        (B, H), the fp32 partial-sum memory ``m`` (B, 4H), and cumulative
+        fired-column counters ``nx``/``nh`` (B,) — the effective-ops
+        numerators ``repro.sparse.occupancy_report`` reduces."""
         cfg = self.cfg
-        return {"layers": [
+        defs = {"layers": [
             {"c": L.PSpec((batch, cfg.hidden), ("batch", "lstm_hidden"),
                           init="zeros", dtype=cfg.dtype),
              "h": L.PSpec((batch, cfg.hidden), ("batch", "lstm_hidden"),
                           init="zeros", dtype=cfg.dtype)}
             for _ in range(cfg.num_layers)]}
+        if self.delta is not None:
+            for i, lp in enumerate(defs["layers"]):
+                x_in = cfg.input_size if i == 0 else cfg.hidden
+                lp.update({
+                    "x_ref": L.PSpec((batch, x_in), ("batch", "embed"),
+                                     init="zeros", dtype=cfg.dtype),
+                    "h_ref": L.PSpec((batch, cfg.hidden),
+                                     ("batch", "lstm_hidden"),
+                                     init="zeros", dtype=cfg.dtype),
+                    "m": L.PSpec((batch, 4 * cfg.hidden),
+                                 ("batch", "lstm_gates"),
+                                 init="zeros", dtype=jnp.float32),
+                    "nx": L.PSpec((batch,), ("batch",), init="zeros",
+                                  dtype=jnp.float32),
+                    "nh": L.PSpec((batch,), ("batch",), init="zeros",
+                                  dtype=jnp.float32),
+                })
+        return defs
 
     def init_cache(self, batch: int, max_len: int):
         return L.init_params(self.cache_defs(batch, max_len),
@@ -272,6 +314,46 @@ class LSTMModel:
             inp = h
         return inp, new_state
 
+    def _delta_step(self, params, x_t, state):
+        """One temporally-sparse time step (Spartus composition).
+
+        ``state``: per-layer dicts {c, h, x_ref, h_ref, m, nx, nh}. Each
+        layer thresholds its input/hidden deltas against the reference
+        states and advances the partial-sum memory with only the fired
+        columns' products: packed params run the fused
+        ``brds_delta_lstm_step`` (delta_rb_dual_spmv + lstm_gates), dense
+        params the masked-delta einsum. Returns (h_last, new_state)."""
+        cfg = self.cfg
+        d = self.delta
+        packed = self.is_packed(params)
+        new_state = []
+        inp = x_t
+        for lp, st in zip(params["layers"], state):
+            dx, fx, x_ref = delta_threshold(inp, st["x_ref"], d.theta_x,
+                                            d.cap_x)
+            dh, fh, h_ref = delta_threshold(st["h"], st["h_ref"], d.theta_h,
+                                            d.cap_h)
+            if packed:
+                c, h, m = K.brds_delta_lstm_step(
+                    lp["w_x"], dx, fx, lp["w_h"], dh, fh, st["m"], lp["b"],
+                    st["c"], pwl=cfg.pwl_activations)
+            else:
+                dxm = jnp.where(fx, dx, 0).astype(jnp.float32)
+                dhm = jnp.where(fh, dh, 0).astype(jnp.float32)
+                m = (st["m"].astype(jnp.float32)
+                     + dxm @ lp["w_x"].T.astype(jnp.float32)
+                     + dhm @ lp["w_h"].T.astype(jnp.float32))
+                z = m + lp["b"].astype(jnp.float32)[None, :]
+                c, h = self._cell(z, st["c"], pwl=cfg.pwl_activations)
+            new_state.append({
+                "c": c.astype(cfg.dtype), "h": h.astype(cfg.dtype),
+                "x_ref": x_ref, "h_ref": h_ref,
+                "m": m.astype(jnp.float32),
+                "nx": st["nx"] + jnp.sum(fx, axis=1, dtype=jnp.float32),
+                "nh": st["nh"] + jnp.sum(fh, axis=1, dtype=jnp.float32)})
+            inp = new_state[-1]["h"]
+        return inp, new_state
+
     def _head_logits(self, params, h):
         """h (B, H) → logits (B, 1, V or C) fp32."""
         return jnp.einsum("bh,hv->bv", h.astype(jnp.float32),
@@ -284,14 +366,45 @@ class LSTMModel:
         return tokens[:, 0].astype(self.cfg.dtype)
 
     def prefill(self, params, tokens, max_len: int, extra=None):
-        """Process a full prompt, build the (c, h) cache. Works on dense
-        and SparsityPlan.pack'd params. Returns (logits (B, 1, V), cache)."""
+        """Process a full prompt, build the decode cache.
+
+        Works on dense and SparsityPlan.pack'd params. With temporal
+        sparsity enabled the prompt is scanned through ``_delta_step`` so
+        the reference states, partial sums, and occupancy counters arrive
+        at decode already warm (the Spartus steady state).
+
+        Parameters
+        ----------
+        params : pytree
+            Dense or packed param tree.
+        tokens : jnp.ndarray
+            (B, S) int token ids (LM) or (B, S, X) feature frames.
+        max_len : int
+            Cache capacity (contractual; the LSTM cache is O(1)).
+        extra : Any, optional
+            Unused by the LSTM (family conditioning slot).
+
+        Returns
+        -------
+        (logits, cache)
+            Last-position logits (B, 1, V) and the decode cache.
+        """
         cfg = self.cfg
         if cfg.vocab_size:
             x = L.embed_apply(params["embed"], tokens)
         else:
             x = tokens.astype(cfg.dtype)
         B = x.shape[0]
+        if self.delta is not None:
+            state = self.init_cache(B, max_len)["layers"]
+
+            def dstep(st, x_t):
+                h, st2 = self._delta_step(params, x_t, list(st))
+                return tuple(st2), h
+
+            state, hs = jax.lax.scan(dstep, tuple(state),
+                                     x.transpose(1, 0, 2))
+            return self._head_logits(params, hs[-1]), {"layers": list(state)}
         state = self.init_state(B)
 
         def step(st, x_t):
@@ -304,8 +417,22 @@ class LSTMModel:
         return logits, cache
 
     def decode_step(self, params, cache, tokens, pos):
-        """One decode step; pos accepted per the contract but unused."""
+        """One decode step over the cache.
+
+        ``pos`` is accepted per the DecodeStep contract but unused (the
+        recurrent cache has no positional structure). Dispatches packed vs
+        dense on the param leaves, and through the temporal-delta path
+        when the model carries a ``delta`` config.
+
+        Returns
+        -------
+        (logits, cache)
+            Logits (B, 1, V) and the advanced cache.
+        """
         x_t = self._embed_step(params, tokens)
+        if self.delta is not None:
+            h, new_state = self._delta_step(params, x_t, cache["layers"])
+            return self._head_logits(params, h), {"layers": new_state}
         state = [(lp["c"], lp["h"]) for lp in cache["layers"]]
         h, new_state = self._step(params, x_t, state)
         logits = self._head_logits(params, h)

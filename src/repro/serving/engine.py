@@ -71,12 +71,30 @@ class ServeEngine:
         policy's patterns; when the model decodes through packed kernels
         (``pack=None`` → ``model.supports_packed_decode``), the pruned
         weights are additionally packed from the prune masks so decode runs
-        the row-balanced SpMV path. Returns (params, report) — report is
-        None when the engine is dense."""
+        the row-balanced SpMV path. A policy carrying an activation rule
+        (``DeltaGateConfig``) is wired into the model here: the engine
+        swaps in ``model.with_delta(...)`` so the decode cache grows the
+        temporal reference state and every step skips unfired columns.
+        Returns (params, report) — report is None when the engine is
+        dense."""
         if self.sparsity is None:
             return params, None
         plan = (self.sparsity.compile(params)
                 if hasattr(self.sparsity, "compile") else self.sparsity)
+        act = getattr(plan, "activation", None)
+        if act is not None:
+            if not hasattr(self.model, "with_delta"):
+                raise ValueError(
+                    f"sparsity policy carries an activation rule ({act}) "
+                    f"but {type(self.model).__name__} has no temporal-"
+                    "delta serving path (with_delta)")
+            self.model = self.model.with_delta(act)
+            self._prefill = jax.jit(self.model.prefill,
+                                    static_argnames=("max_len",))
+            self._loops.clear()
+            if self.mesh is not None:   # the delta cache has more leaves
+                self._c_sh = cache_shardings(self.mesh, self.model,
+                                             self.batch, self.max_len)
         pruned, masks = plan.prune(params)
         report = plan.summary(masks)
         if pack is None:
@@ -108,12 +126,16 @@ class ServeEngine:
 
     def generate(self, params, tokens, steps: int, *, extra=None,
                  temperature: float = 0.0, top_k: int = 0, eos_id: int = -1,
-                 rng=None, sampling: SamplingConfig | None = None):
+                 rng=None, sampling: SamplingConfig | None = None,
+                 return_state: bool = False):
         """Generate ``steps`` tokens for a lockstep batch of prompts.
 
         tokens (B, S) prompt; ``extra`` is family-specific conditioning
         (encoder frames, patch embeds). Returns (B, steps) int32 ids —
         finished sequences (per-sequence EOS) pad with ``sampling.pad_id``.
+        ``return_state=True`` additionally returns the decode_loop's final
+        state dict (cache/logits/pos/...), e.g. to read the temporal-delta
+        occupancy counters out of the cache after serving.
         """
         if sampling is None:
             sampling = SamplingConfig(temperature=temperature, top_k=top_k,
@@ -123,5 +145,6 @@ class ServeEngine:
         logits, cache = self._prefill(params, tokens, max_len=self.max_len,
                                       extra=extra)
         pos = jnp.int32(tokens.shape[1])
-        toks, _ = self._loop(steps, sampling)(params, cache, logits, pos, rng)
-        return toks
+        toks, state = self._loop(steps, sampling)(params, cache, logits,
+                                                  pos, rng)
+        return (toks, state) if return_state else toks

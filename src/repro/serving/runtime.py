@@ -38,6 +38,30 @@ __all__ = ["DecodeStep", "conforms", "decode_loop"]
 
 @runtime_checkable
 class DecodeStep(Protocol):
+    """The decode contract every servable model family implements.
+
+    Methods
+    -------
+    cache_defs(batch, max_len)
+        Decode-cache declaration as a PSpec pytree — KV cache, recurrent
+        state, the LSTM's (c, h) (+ its temporal-delta reference
+        state/partial sums when enabled); whatever the family keeps per
+        sequence. The logical axis names drive cache sharding and the
+        scheduler's slot joins.
+    init_cache(batch, max_len)
+        Concrete zeroed cache matching ``cache_defs``.
+    prefill(params, tokens, max_len, extra=None)
+        Process a full prompt. ``tokens``: (B, S) ids or (B, S, X)
+        frames; ``extra`` is family-specific conditioning (VLM patch
+        embeds, enc-dec encoder frames). Returns (last logits (B, 1, V),
+        cache).
+    decode_step(params, cache, tokens, pos)
+        Advance one token. ``tokens``: (B, 1); ``pos`` is a scalar next
+        cache position (lockstep batch) or a (B,) int32 vector of
+        per-sequence positions (continuous batching). Returns (logits
+        (B, 1, V), cache).
+    """
+
     def cache_defs(self, batch: int, max_len: int) -> Any: ...
 
     def init_cache(self, batch: int, max_len: int) -> Any: ...
@@ -57,16 +81,38 @@ def decode_loop(model, params, cache, logits, pos, rng, steps: int,
                 limit: int | None = None):
     """Generate ``steps`` tokens on device with one ``lax.scan``.
 
-    logits: (B, 1, V) last-position logits from prefill (or a previous loop).
-    pos:    scalar next cache position (lockstep) or (B,) per-sequence
-            positions (continuous batching; frozen once a sequence is done).
-    done:   (B,) bool — sequences that start finished (inactive slots).
-    budget: (B,) int32 — per-sequence max tokens to emit this call.
-    limit:  cache capacity; sequences stop before writing past it.
+    Parameters
+    ----------
+    model : DecodeStep
+        The servable model.
+    params : pytree
+        Dense, pruned, or SparsityPlan.pack'd params.
+    cache : pytree
+        Decode cache (donate it at the jit boundary).
+    logits : jnp.ndarray
+        (B, 1, V) last-position logits from prefill (or a previous loop).
+    pos : jnp.ndarray
+        Scalar next cache position (lockstep) or (B,) per-sequence
+        positions (continuous batching; frozen once a sequence is done).
+    rng : jax.random key
+        Sampling key (split per step).
+    steps : int
+        Tokens to generate (static — one compiled scan per value).
+    sampling : SamplingConfig
+        Greedy/temperature/top-k + EOS/pad configuration.
+    done : jnp.ndarray, optional
+        (B,) bool — sequences that start finished (inactive slots).
+    budget : jnp.ndarray, optional
+        (B,) int32 — per-sequence max tokens to emit this call.
+    limit : int, optional
+        Cache capacity; sequences stop before writing past it.
 
-    Returns (tokens (B, steps) int32, state dict with the final
-    cache/logits/pos/rng/done/emitted carry) — everything needed to resume
-    the loop (the scheduler chains chunks this way).
+    Returns
+    -------
+    (tokens, state)
+        ``tokens`` (B, steps) int32; ``state`` dict with the final
+        cache/logits/pos/rng/done/emitted carry — everything needed to
+        resume the loop (the scheduler chains chunks this way).
     """
     B = logits.shape[0]
     pos = jnp.asarray(pos, jnp.int32)

@@ -85,6 +85,9 @@ class ContinuousBatchingEngine:
         self._queue: deque[Request] = deque()
         self._slot_uid: list[int | None] = [None] * slots
         self._slot_prompt_len = [0] * slots
+        # steps the current occupant's cache has accumulated (prefill +
+        # chunk decodes) — the divisor for per-slot occupancy accounting
+        self.slot_steps = np.zeros(slots, np.int64)
         self._remaining = np.zeros(slots, np.int64)
         self._collected: dict[int, list[int]] = {}
         self._next_uid = 0
@@ -153,6 +156,7 @@ class ContinuousBatchingEngine:
                 jnp.int32(slot), jnp.int32(plen))
             self._slot_uid[slot] = req.uid
             self._slot_prompt_len[slot] = plen
+            self.slot_steps[slot] = plen    # join resets the slot's cache
             # cap the budget at the cache capacity left after the prompt
             self._remaining[slot] = min(req.max_new, self.max_len - plen)
 
@@ -172,6 +176,9 @@ class ContinuousBatchingEngine:
         self.cache, self.logits = st["cache"], st["logits"]
         self.pos, self.rng = st["pos"], st["rng"]
         self.steps_dispatched += 1
+        # every slot steps through decode_step each chunk (done slots
+        # included — lockstep semantics), so all caches advance
+        self.slot_steps += self.chunk
 
         toks_np = np.asarray(toks)              # the one host sync per chunk
         finished: list[Finished] = []

@@ -1,6 +1,6 @@
 """repro.sparse — the one public API for sparsity.
 
-Three layers, one seam:
+Four layers, one seam:
 
   formats  — SparseFormat registry (row_balanced, bank_balanced, block,
              unstructured): mask generation, packed representation,
@@ -8,6 +8,10 @@ Three layers, one seam:
   policy   — SparsityPolicy (per-weight-family pattern + ratio) compiles
              against any model's param tree into a SparsityPlan with
              prune / mask_grads / pack.
+  temporal — DeltaGateConfig: Spartus-style activation-delta skipping
+             (threshold Θ, reference-state tracking, occupancy caps)
+             carried as the policy's activation rule and composed with
+             the packed weight formats at decode time.
   backend  — "pallas" | "ref" | "auto", configured once on the policy or
              process-wide, replacing per-call use_kernel= flags.
 
@@ -25,6 +29,8 @@ from .policy import (Rule, SparsityPolicy, SparsityPlan, lstm_policy,
                      sparsity_report)
 from .search import BRDSResult, brds_search, plane_search, \
     execution_time_model
+from .temporal import (DeltaGateConfig, cap_count, delta_threshold,
+                       occupancy_report)
 
 __all__ = [
     "BACKENDS", "get_default_backend", "set_default_backend", "use_backend",
@@ -33,4 +39,5 @@ __all__ = [
     "Rule", "SparsityPolicy", "SparsityPlan", "lstm_policy",
     "transformer_policy", "apply_masks", "mask_grads", "sparsity_report",
     "BRDSResult", "brds_search", "plane_search", "execution_time_model",
+    "DeltaGateConfig", "cap_count", "delta_threshold", "occupancy_report",
 ]

@@ -51,10 +51,28 @@ def use_backend(backend: str):
 def resolve(backend: str | None = None) -> str:
     """Resolve a per-call backend to concrete "pallas" or "ref".
 
-    None and "auto" both defer to the configured process default, so
-    ``set_default_backend``/``use_backend`` reach every policy/plan left at
-    backend="auto". A default of "auto" means "let the system pick" →
-    "pallas" (the kernels run interpreted on CPU, so this is always safe).
+    Parameters
+    ----------
+    backend : {"pallas", "ref", "auto", None}
+        Per-call request. None and "auto" both defer to the configured
+        process default, so ``set_default_backend``/``use_backend`` reach
+        every policy/plan left at backend="auto". A default of "auto"
+        means "let the system pick" → "pallas" (the kernels run
+        interpreted on CPU, so this is always safe).
+
+    Returns
+    -------
+    str
+        Concrete ``"pallas"`` or ``"ref"``.
+
+    Examples
+    --------
+    >>> resolve("ref")
+    'ref'
+    >>> resolve("pallas")
+    'pallas'
+    >>> resolve(None) in ("pallas", "ref")
+    True
     """
     if backend is not None and backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")

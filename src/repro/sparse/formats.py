@@ -62,19 +62,58 @@ class MaskedDense:
 # ------------------------------------------------------------- base class
 
 class SparseFormat:
-    """Base class; subclasses override the pattern-specific pieces."""
+    """One sparsity pattern's full lifecycle.
+
+    Subclasses override the pattern-specific pieces and register an
+    instance (``register(MyFormat())``); the registry name is then valid
+    in any :class:`~repro.sparse.policy.SparsityPolicy` rule.
+
+    Attributes
+    ----------
+    name : str
+        Registry key (e.g. ``"row_balanced"``). Must be non-empty.
+
+    Notes
+    -----
+    Matrix convention (the accelerator's): logical shape (rows, ncols)
+    with rows = OUTPUT units and ncols = fan-in, so ``matvec(packed, x)``
+    maps x (B, ncols) → y (B, rows) and every row accumulates exactly its
+    own non-zeros — the balanced-PE invariant.
+    """
 
     name: str = ""
 
     # -- mask generation -----------------------------------------------
     def mask(self, w: jnp.ndarray, ratio: float, **opts) -> jnp.ndarray:
+        """Pruning mask for one weight matrix.
+
+        Parameters
+        ----------
+        w : jnp.ndarray
+            Dense (rows, ncols) weight (or batched, where supported).
+        ratio : float
+            Fraction to prune, in [0, 1).
+        **opts
+            Pattern options from the rule (e.g. ``num_banks``, ``block``).
+
+        Returns
+        -------
+        jnp.ndarray
+            Bool keep-mask of ``w``'s shape (True = keep).
+        """
         raise NotImplementedError
 
     # -- packed representation -----------------------------------------
     def pack(self, w: jnp.ndarray, mask: jnp.ndarray) -> Any:
+        """Packed representation of ``w`` under ``mask``.
+
+        Returns a pytree (jit/pjit/scan-safe). The base implementation is
+        :class:`MaskedDense` — formats with dedicated kernels override.
+        """
         return MaskedDense(values=S.apply_mask(w, mask), mask=mask)
 
     def unpack(self, packed: Any) -> jnp.ndarray:
+        """Dense (rows, ncols) reconstruction (zeros where pruned)."""
         return packed.values
 
     def abstract_pack(self, rows: int, ncols: int, ratio: float,
@@ -96,7 +135,22 @@ class SparseFormat:
     # -- kernels --------------------------------------------------------
     def matvec(self, packed: Any, x: jnp.ndarray, *,
                backend: str | None = None) -> jnp.ndarray:
-        """x (B, ncols) → (B, rows). Masked-dense default: a dense dot."""
+        """Sparse matrix × dense batch-of-vectors.
+
+        Parameters
+        ----------
+        packed : Any
+            This format's packed representation.
+        x : jnp.ndarray
+            Activations, (B, ncols).
+        backend : {"pallas", "ref", "auto", None}, optional
+            Kernel backend; None defers to the configured default.
+
+        Returns
+        -------
+        jnp.ndarray
+            (B, rows) in ``x.dtype``. Masked-dense default: a dense dot.
+        """
         del backend  # no dedicated kernel; XLA's dot is the only path
         return (x.astype(jnp.float32)
                 @ packed.values.astype(jnp.float32).T).astype(x.dtype)
@@ -104,7 +158,10 @@ class SparseFormat:
     def dual_matvec(self, pa: Any, x: jnp.ndarray, pb: Any, h: jnp.ndarray,
                     bias: jnp.ndarray | None = None, *,
                     backend: str | None = None) -> jnp.ndarray:
-        """z = A@x + B@h (+ bias) — the LSTM gate preactivation shape."""
+        """z = A@x + B@h (+ bias) — the LSTM gate preactivation shape.
+
+        Same-format pairs may fuse (row_balanced → the Pallas dual-ratio
+        kernel); the default is two matvecs accumulated in fp32."""
         z = (self.matvec(pa, x, backend=backend).astype(jnp.float32)
              + self.matvec(pb, h, backend=backend).astype(jnp.float32))
         if bias is not None:
@@ -114,11 +171,33 @@ class SparseFormat:
     # -- storage accounting --------------------------------------------
     def packed_bytes(self, rows: int, ncols: int, ratio: float,
                      dtype, **opts) -> int:
-        """Analytic packed storage (values + index metadata)."""
+        """Analytic packed storage in bytes (values + index metadata).
+
+        Parameters
+        ----------
+        rows, ncols : int
+            Logical matrix shape.
+        ratio : float
+            Sparsity ratio the matrix would be pruned at.
+        dtype : dtype-like
+            Value storage dtype.
+
+        Returns
+        -------
+        int
+            Packed byte count for one matrix.
+        """
         raise NotImplementedError
 
     def memory_bytes(self, packed: Any, **opts) -> dict:
-        """Accounting for a concrete packed rep (Table-1 analogue)."""
+        """Accounting for a concrete packed rep (Table-1 analogue).
+
+        Returns
+        -------
+        dict
+            ``values``/``indices``/``total`` byte counts, the
+            ``dense_equiv`` bytes, and their ``ratio``.
+        """
         raise NotImplementedError
 
     def _mem_dict(self, values_b: int, index_b: int, rows: int, ncols: int,

@@ -123,11 +123,40 @@ def _is_stacked(ps: str, leaf_ndim: int) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class SparsityPolicy:
-    """Ordered rules (first match wins) + the kernel backend, configured
-    once for everything the policy touches."""
+    """One declaration of everything sparse about a deployment.
+
+    Ordered weight rules (first match wins) select a (format, ratio) per
+    param-path regex; ``backend`` picks the kernel implementation once for
+    everything the policy touches; ``activation`` optionally adds the
+    temporal (activation-side) rule — a
+    :class:`repro.sparse.temporal.DeltaGateConfig` that serving threads
+    into the model's decode cache (Spartus-style delta skipping composed
+    with the packed weight formats).
+
+    Parameters
+    ----------
+    rules : tuple of Rule
+        Weight rules, matched in order against each param path.
+    backend : {"auto", "pallas", "ref"}
+        Kernel backend for every matvec the compiled plan dispatches.
+    activation : DeltaGateConfig, optional
+        Temporal-delta activation rule; None (default) means dense
+        activations.
+
+    Examples
+    --------
+    >>> p = SparsityPolicy.of({r"w_x$": ("row_balanced", 0.875),
+    ...                        r"w_h$": ("row_balanced", 0.75)},
+    ...                       layout="out_in")
+    >>> p.match("layers/0/w_x").ratio
+    0.875
+    >>> p.match("layers/0/b") is None
+    True
+    """
 
     rules: tuple
     backend: str = "auto"
+    activation: Any = None
 
     def __post_init__(self):
         if self.backend not in B.BACKENDS:
@@ -136,9 +165,25 @@ class SparsityPolicy:
 
     @classmethod
     def of(cls, mapping: Mapping[str, Any], *, backend: str = "auto",
-           layout: str = "in_out") -> "SparsityPolicy":
-        """Build from ``{pattern: ratio | (format, ratio) |
-        (format, ratio, options)}``. Bare floats mean row_balanced."""
+           layout: str = "in_out", activation: Any = None) -> "SparsityPolicy":
+        """Build a policy from a ``{pattern: spec}`` mapping.
+
+        Parameters
+        ----------
+        mapping : Mapping[str, float | tuple]
+            ``{pattern: ratio | (format, ratio) | (format, ratio,
+            options)}``; bare floats mean ``row_balanced``.
+        backend : {"auto", "pallas", "ref"}
+            Kernel backend for the compiled plan.
+        layout : {"out_in", "in_out", "out_trailing"}
+            Weight layout shared by every rule built here.
+        activation : DeltaGateConfig, optional
+            Temporal-delta activation rule.
+
+        Returns
+        -------
+        SparsityPolicy
+        """
         rules = []
         for pat, spec in mapping.items():
             if isinstance(spec, (int, float)):
@@ -148,12 +193,20 @@ class SparsityPolicy:
                 opts = rest[0] if rest else {}
                 rules.append(Rule(pat, fmt, float(ratio), layout,
                                   dict(opts)))
-        return cls(rules=tuple(rules), backend=backend)
+        return cls(rules=tuple(rules), backend=backend,
+                   activation=activation)
 
     def with_backend(self, backend: str) -> "SparsityPolicy":
+        """Copy of this policy with a different kernel backend."""
         return dataclasses.replace(self, backend=backend)
 
+    def with_activation(self, activation) -> "SparsityPolicy":
+        """Copy of this policy with a temporal-delta activation rule
+        (a ``DeltaGateConfig``, or None to disable)."""
+        return dataclasses.replace(self, activation=activation)
+
     def match(self, path_str: str) -> Rule | None:
+        """First rule whose pattern ``re.search``-matches ``path_str``."""
         for r in self.rules:
             if re.search(r.pattern, path_str):
                 return r
@@ -188,8 +241,21 @@ _BATCHED_MASK_FORMATS = {"row_balanced"}  # mask() accepts leading batch dims
 
 
 class SparsityPlan:
-    """A policy compiled against one param tree. All methods are pure and
-    jit-compatible on the array side; site resolution happened at compile."""
+    """A policy compiled against one param tree.
+
+    All methods are pure and jit-compatible on the array side; site
+    resolution (shape/layout/format per matched leaf) happened at compile.
+    The plan is the deployment handle: ``prune`` → ``mask_grads`` (retrain)
+    → ``pack`` (serve), plus ``matvec`` kernel dispatch per site, with the
+    policy's backend and activation rule riding along.
+
+    Attributes
+    ----------
+    policy : SparsityPolicy
+        The declaration this plan was compiled from.
+    sites : dict
+        ``{path: _Site}`` for every matched param leaf.
+    """
 
     def __init__(self, policy: SparsityPolicy, sites: dict):
         self.policy = policy
@@ -197,7 +263,14 @@ class SparsityPlan:
 
     @property
     def backend(self) -> str:
+        """The policy's kernel backend ("auto" | "pallas" | "ref")."""
         return self.policy.backend
+
+    @property
+    def activation(self):
+        """The policy's temporal-delta activation rule
+        (``DeltaGateConfig`` or None)."""
+        return self.policy.activation
 
     def __repr__(self):
         return (f"SparsityPlan(backend={self.backend!r}, "
@@ -330,12 +403,26 @@ def sparsity_report(masks: dict) -> dict:
 # --------------------------------------------------------- stock policies
 
 def lstm_policy(spar_x: float, spar_h: float, *, backend: str = "auto",
-                fmt: str = "row_balanced") -> SparsityPolicy:
+                fmt: str = "row_balanced", delta=None) -> SparsityPolicy:
     """The paper's dual-ratio split: input weights W_x at ``spar_x``,
-    recurrent weights W_h at ``spar_h`` (both row-balanced by default)."""
+    recurrent weights W_h at ``spar_h`` (both row-balanced by default).
+
+    Parameters
+    ----------
+    spar_x, spar_h : float
+        Sparsity ratios for the input / recurrent weight families.
+    backend : {"auto", "pallas", "ref"}
+        Kernel backend configured on the policy.
+    fmt : str
+        Registered format name for both families.
+    delta : DeltaGateConfig, optional
+        Temporal-delta activation rule (Spartus-style skipping) to carry
+        alongside the weight rules — serving wires it into the LSTM's
+        decode cache (see ``repro.sparse.temporal``).
+    """
     return SparsityPolicy.of(
         {r"w_x$": (fmt, spar_x), r"w_h$": (fmt, spar_h)},
-        backend=backend, layout="out_in")
+        backend=backend, layout="out_in", activation=delta)
 
 
 # (pattern, family, layout) — family A pruned at spar_a, B at spar_b.

@@ -1,0 +1,223 @@
+"""Temporal delta sparsity — Spartus-style activation skipping.
+
+BRDS prunes the *weights* (row-balanced, dual ratio); Spartus [Gao et al.,
+2021] shows the other half of the win is on the *activation* side: across
+decode steps, most components of the LSTM input x_t and hidden state
+h_{t-1} barely change, so their matvec columns contribute (numerically)
+the same products as last step. A delta accelerator keeps a *reference
+state* per activation vector and a *partial-sum memory* m per gate
+preactivation, and each step computes only the columns whose delta
+crossed a threshold Θ:
+
+    d        = v_t - ref                    (raw delta)
+    fired    = |d| > Θ                      (optionally capped, see below)
+    ref'     = fired ? v_t : ref            (reference tracks fired columns)
+    m'       = m + W @ (fired · d)          (only fired columns' products)
+    z_t      = m' + bias                    (the gate preactivation)
+
+With Θ = 0 every changed column fires, the reference tracks the input
+exactly, and the trajectory reproduces the dense/packed decode (up to
+float re-association of the accumulation, which greedy decoding does not
+see). With Θ > 0 the *occupancy* (fired fraction) drops and the effective
+MAC count shrinks proportionally — multiplying with the weight-sparsity
+reduction, since the matvec runs over the packed row-balanced weights
+(``kernels.ops.delta_rb_spmv``).
+
+The optional *occupancy cap* bounds the fired-column count per step at a
+fixed fraction of the vector (largest-|delta| columns win), giving the
+hardware a worst-case bound per step — the activation-side analogue of
+the row-balanced guarantee on the weight side.
+
+``DeltaGateConfig`` is the declaration serving carries: per-family
+thresholds (Θ_x for the input path, Θ_h for the recurrent path) and caps.
+``SparsityPolicy`` accepts it as its activation rule
+(``lstm_policy(..., delta=cfg)``), ``SparsityPlan`` exposes it, and
+``ServeEngine.prepare`` wires it into the model's DecodeStep cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DeltaGateConfig", "cap_count", "delta_threshold",
+           "occupancy_report"]
+
+
+def cap_count(cap: float | None, n: int) -> int | None:
+    """Static fired-column budget for an occupancy cap over ``n`` columns.
+
+    Parameters
+    ----------
+    cap : float or None
+        Occupancy cap in (0, 1], or None for uncapped.
+    n : int
+        Activation vector width.
+
+    Returns
+    -------
+    int or None
+        Maximum fired columns per step (at least 1), or None if uncapped
+        (``cap`` is None or already admits every column).
+
+    Examples
+    --------
+    >>> cap_count(0.25, 128)
+    32
+    >>> cap_count(0.001, 128)
+    1
+    >>> cap_count(None, 128) is None
+    True
+    >>> cap_count(1.0, 128) is None
+    True
+    """
+    if cap is None:
+        return None
+    k = max(1, int(round(cap * n)))
+    return None if k >= n else k
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaGateConfig:
+    """Declaration of a temporal-delta gate (the activation-side rule).
+
+    Parameters
+    ----------
+    theta_x : float
+        Delta threshold Θ for the input activation path (columns of W_x).
+        0.0 means every changed component fires (exact decode).
+    theta_h : float
+        Threshold for the recurrent path (columns of W_h). The recurrent
+        state usually tolerates a smaller Θ than the input (Spartus's
+        per-path split, mirroring BRDS's dual weight ratios).
+    cap_x, cap_h : float or None
+        Optional occupancy caps in (0, 1]: at most ``cap * width`` columns
+        fire per step (largest |delta| win), bounding worst-case work —
+        the activation-side analogue of row balance.
+
+    Examples
+    --------
+    >>> cfg = DeltaGateConfig(theta_x=0.05, theta_h=0.02, cap_x=0.5)
+    >>> cfg.theta_h
+    0.02
+    >>> DeltaGateConfig()            # doctest: +ELLIPSIS
+    DeltaGateConfig(theta_x=0.0, theta_h=0.0, cap_x=None, cap_h=None)
+    """
+
+    theta_x: float = 0.0
+    theta_h: float = 0.0
+    cap_x: float | None = None
+    cap_h: float | None = None
+
+    def __post_init__(self):
+        for name in ("theta_x", "theta_h"):
+            if getattr(self, name) < 0.0:
+                raise ValueError(f"{name} must be >= 0, "
+                                 f"got {getattr(self, name)}")
+        for name in ("cap_x", "cap_h"):
+            v = getattr(self, name)
+            if v is not None and not (0.0 < v <= 1.0):
+                raise ValueError(f"{name} must be in (0, 1], got {v}")
+
+
+def delta_threshold(v: jnp.ndarray, ref: jnp.ndarray, theta: float,
+                    cap: float | None = None):
+    """Threshold one activation vector's delta against its reference state.
+
+    Parameters
+    ----------
+    v : jnp.ndarray
+        Current activation, shape (B, N).
+    ref : jnp.ndarray
+        Reference state (the last fired values), shape (B, N).
+    theta : float
+        Fire when ``|v - ref| > theta``. Θ=0 fires exactly the changed
+        components, so the new reference equals ``v`` bit-for-bit.
+    cap : float or None
+        Occupancy cap: keep at most ``cap_count(cap, N)`` fired columns
+        per batch row, largest |delta| first (exact budget — ties are
+        broken by column order via ``jax.lax.top_k``).
+
+    Returns
+    -------
+    d : jnp.ndarray
+        Raw delta ``v - ref``, (B, N) — the kernel masks it with ``fired``.
+    fired : jnp.ndarray
+        Bool fired mask, (B, N).
+    new_ref : jnp.ndarray
+        Updated reference: ``v`` where fired, ``ref`` elsewhere.
+    """
+    d = (v - ref).astype(v.dtype)
+    fired = jnp.abs(d) > theta
+    k = cap_count(cap, v.shape[-1])
+    if k is not None:
+        score = jnp.where(fired, jnp.abs(d).astype(jnp.float32), -jnp.inf)
+        topv, topi = jax.lax.top_k(score, k)
+        rows = jnp.broadcast_to(jnp.arange(v.shape[0])[:, None], topi.shape)
+        fired = jnp.zeros_like(fired).at[rows, topi].set(topv > -jnp.inf)
+    new_ref = jnp.where(fired, v, ref)
+    return d, fired, new_ref
+
+
+def occupancy_report(cache, *, steps: int, packed=None) -> dict:
+    """Summarize fired-column occupancy from a delta decode cache.
+
+    The LSTM's delta cache accumulates per-sequence fired-column counts
+    (``nx``/``nh`` per layer). Given the number of processed steps, this
+    reduces them to the occupancy and — when the packed params are
+    supplied — the effective-ops reduction vs. always-on packed decode
+    (the Spartus × BRDS composition: MACs ≈ occupancy × packed MACs).
+
+    Parameters
+    ----------
+    cache : dict
+        A delta decode cache (``{"layers": [{"nx", "nh", ...}, ...]}``).
+    steps : int or array-like
+        Decode steps the counters accumulated over (prefill + generated):
+        a scalar for a lockstep batch, or a (B,) per-sequence vector (the
+        continuous-batching scheduler's ``slot_steps``, where each slot's
+        cache restarts at its occupant's join).
+    packed : pytree, optional
+        The SparsityPlan.pack'd params; enables the MAC-weighted
+        reduction (columns weighted by their family's per-row K).
+
+    Returns
+    -------
+    dict
+        ``occupancy_x``/``occupancy_h`` mean fired fractions,
+        ``occupancy`` the combined fraction, and — with ``packed`` —
+        ``effective_macs``, ``packed_macs`` and ``ops_reduction``
+        (packed/effective, ≥ 1; multiply by the weight-side gain for the
+        end-to-end figure).
+    """
+    import numpy as np
+    layers = cache["layers"]
+    # scalar steps → per-sequence vector, so lockstep and continuous
+    # (per-slot slot_steps) share one accounting path
+    B = layers[0]["x_ref"].shape[0]
+    steps_b = np.broadcast_to(np.asarray(steps, np.float64), (B,))
+    step_sum = float(steps_b.sum())
+    fx = fh = tx = th = 0.0
+    eff = total = 0.0
+    for i, lp in enumerate(layers):
+        nx = float(np.asarray(jnp.sum(lp["nx"])))
+        nh = float(np.asarray(jnp.sum(lp["nh"])))
+        X = lp["x_ref"].shape[1]
+        H = lp["h_ref"].shape[1]
+        fx += nx
+        fh += nh
+        tx += step_sum * X
+        th += step_sum * H
+        if packed is not None:
+            sx = packed["layers"][i]["w_x"]
+            sh = packed["layers"][i]["w_h"]
+            # MACs per fired column ≈ the family's nnz-per-column R*K/N
+            eff += nx * sx.rows * sx.K / X + nh * sh.rows * sh.K / H
+            total += step_sum * (sx.rows * sx.K + sh.rows * sh.K)
+    out = dict(occupancy_x=fx / max(tx, 1), occupancy_h=fh / max(th, 1),
+               occupancy=(fx + fh) / max(tx + th, 1))
+    if packed is not None:
+        out.update(effective_macs=eff, packed_macs=total,
+                   ops_reduction=total / max(eff, 1e-9))
+    return out

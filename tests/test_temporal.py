@@ -1,0 +1,240 @@
+"""Temporal delta sparsity (repro.sparse.temporal + delta_rb_spmv).
+
+Covers the ISSUE-3 acceptance criteria: delta_rb_spmv pallas↔ref parity,
+Θ=0 reproducing the dense/packed decode trajectory, and serving parity
+under the continuous-batching scheduler with delta enabled.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack_from_dense
+from repro.kernels import (delta_rb_spmv, delta_rb_dual_spmv, ref)
+from repro.kernels import ops as K
+from repro.models import LSTMModel, LSTMConfig
+from repro.serving import (ServeEngine, ContinuousBatchingEngine,
+                           SamplingConfig)
+from repro.sparse import (DeltaGateConfig, SparsityPolicy, cap_count,
+                          delta_threshold, lstm_policy, occupancy_report,
+                          use_backend)
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32), dtype)
+
+
+# ------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("rows,cols,spar,B", [
+    (128, 64, 0.5, 1), (256, 96, 0.75, 4), (96, 33, 0.3, 3),
+])
+def test_delta_rb_spmv_matches_ref(rng, rows, cols, spar, B):
+    s = pack_from_dense(_rand(rng, (rows, cols)), spar)
+    d = _rand(rng, (B, cols))
+    fired = jnp.asarray(rng.random((B, cols)) > 0.5)
+    got = delta_rb_spmv(s, d, fired, block_rows=64)
+    want = ref.delta_rb_spmv_ref(s, d, fired.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("H,X,sx,sh", [(64, 48, 0.875, 0.5)])
+def test_delta_rb_dual_spmv_matches_ref(rng, H, X, sx, sh):
+    """The fused partial-sum update m' = m + Sx@(fx·dx) + Sh@(fh·dh)."""
+    sx_p = pack_from_dense(_rand(rng, (4 * H, X)), sx)
+    sh_p = pack_from_dense(_rand(rng, (4 * H, H)), sh)
+    dx, dh = _rand(rng, (2, X)), _rand(rng, (2, H))
+    fx = jnp.asarray(rng.random((2, X)) > 0.3)
+    fh = jnp.asarray(rng.random((2, H)) > 0.3)
+    m = _rand(rng, (2, 4 * H))
+    got = delta_rb_dual_spmv(sx_p, dx, fx, sh_p, dh, fh, m, block_rows=64)
+    want = ref.delta_rb_dual_spmv_ref(sx_p, dx, fx.astype(jnp.float32),
+                                      sh_p, dh, fh.astype(jnp.float32), m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_delta_spmv_unfired_columns_contribute_nothing(rng):
+    """delta_rb_spmv over a fired mask equals rb_spmv over the masked
+    delta — the unfired columns' products never land."""
+    s = pack_from_dense(_rand(rng, (128, 64)), 0.75)
+    d = _rand(rng, (2, 64))
+    fired = jnp.asarray(rng.random((2, 64)) > 0.7)
+    got = K.delta_rb_spmv(s, d, fired, backend="ref")
+    want = K.rb_spmv(s, jnp.where(fired, d, 0.0), backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+# ------------------------------------------------- thresholding semantics
+
+def test_delta_threshold_theta0_tracks_exactly(rng):
+    v = _rand(rng, (3, 32))
+    ref_state = v.at[:, ::2].add(1.0)       # half the columns changed
+    d, fired, new_ref = delta_threshold(v, ref_state, 0.0)
+    assert bool(jnp.all(fired[:, ::2])) and not bool(jnp.any(fired[:, 1::2]))
+    np.testing.assert_array_equal(np.asarray(new_ref), np.asarray(v))
+
+
+def test_delta_threshold_cap_is_exact_budget(rng):
+    v = _rand(rng, (4, 64))
+    d, fired, new_ref = delta_threshold(v, jnp.zeros_like(v), 0.0, cap=0.25)
+    counts = np.asarray(jnp.sum(fired, axis=1))
+    assert (counts == cap_count(0.25, 64)).all()
+    # the survivors are the largest |delta| columns
+    top = np.argsort(-np.abs(np.asarray(d)), axis=1)[:, :16]
+    fired_np = np.asarray(fired)
+    for b in range(4):
+        assert fired_np[b, top[b]].all()
+    # unfired columns keep the old reference
+    np.testing.assert_array_equal(np.asarray(new_ref)[~fired_np],
+                                  np.zeros_like(v)[~fired_np])
+
+
+def test_delta_gate_config_validation():
+    with pytest.raises(ValueError):
+        DeltaGateConfig(theta_x=-0.1)
+    with pytest.raises(ValueError):
+        DeltaGateConfig(cap_x=0.0)
+    assert cap_count(None, 100) is None
+    assert cap_count(1.0, 100) is None
+
+
+# --------------------------------------------------- policy plumbing
+
+def test_policy_carries_activation_rule():
+    cfg = DeltaGateConfig(theta_x=0.05, theta_h=0.02)
+    pol = lstm_policy(0.875, 0.75, delta=cfg)
+    assert pol.activation == cfg
+    model = LSTMModel(LSTMConfig("t", input_size=16, hidden=32,
+                                 vocab_size=64))
+    plan = pol.compile(model.init(jax.random.key(0)))
+    assert plan.activation == cfg
+    assert pol.with_activation(None).activation is None
+    # SparsityPolicy.of also accepts it
+    assert SparsityPolicy.of({r"w_x$": 0.5}, activation=cfg).activation is cfg
+
+
+def test_engine_prepare_wires_delta_model():
+    cfg = LSTMConfig("t", input_size=16, hidden=32, vocab_size=64)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    dcfg = DeltaGateConfig(theta_x=0.1)
+    eng = ServeEngine(model, cfg, max_len=16, batch=2,
+                      sparsity=lstm_policy(0.5, 0.5, delta=dcfg))
+    eng.prepare(params)
+    assert eng.model is not model and eng.model.delta == dcfg
+    defs = eng.model.cache_defs(2, 16)["layers"][0]
+    assert {"x_ref", "h_ref", "m", "nx", "nh"} <= set(defs)
+
+
+# --------------------------------------------- decode trajectory parity
+
+def _lm(num_layers=2):
+    cfg = LSTMConfig("t", input_size=48, hidden=64, num_layers=num_layers,
+                     vocab_size=128)
+    model = LSTMModel(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def test_theta0_matches_packed_decode_trajectory():
+    """Θ=0 fires every changed column → greedy decode reproduces the
+    packed (non-delta) trajectory token for token."""
+    cfg, model, params = _lm()
+    B, P, G = 3, 10, 24
+    prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
+    with use_backend("ref"):
+        eng0 = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                           sparsity=lstm_policy(0.875, 0.75))
+        packed0, _ = eng0.prepare(params)
+        base = eng0.generate(packed0, prompt, G)
+
+        eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                          sparsity=lstm_policy(0.875, 0.75,
+                                               delta=DeltaGateConfig()))
+        packed, _ = eng.prepare(params)
+        toks, state = eng.generate(packed, prompt, G, return_state=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(toks))
+    occ = occupancy_report(state["cache"], steps=P + G, packed=packed)
+    assert 0.0 < occ["occupancy"] <= 1.0 and occ["ops_reduction"] >= 1.0
+
+
+def test_theta0_matches_dense_decode_states():
+    """Dense params + Θ=0: the delta path's hidden state tracks the plain
+    dense step to accumulation tolerance."""
+    cfg, model, params = _lm(num_layers=1)
+    dmodel = model.with_delta(DeltaGateConfig())
+    B, T = 2, 12
+    x = jax.random.randint(jax.random.key(2), (B, T), 0, cfg.vocab_size)
+    _, cache_d = model.prefill(params, x, max_len=T)
+    _, cache_delta = dmodel.prefill(params, x, max_len=T)
+    np.testing.assert_allclose(
+        np.asarray(cache_delta["layers"][0]["h"]),
+        np.asarray(cache_d["layers"][0]["h"]), atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(
+        np.asarray(cache_delta["layers"][0]["c"]),
+        np.asarray(cache_d["layers"][0]["c"]), atol=2e-5, rtol=2e-5)
+
+
+def test_delta_pallas_matches_ref_backend_decode():
+    """The packed delta decode agrees between the Pallas kernels and the
+    jnp reference formulations."""
+    cfg, model, params = _lm(num_layers=1)
+    B, P, G = 2, 6, 8
+    prompt = jax.random.randint(jax.random.key(3), (B, P), 0, cfg.vocab_size)
+    pol = lstm_policy(0.75, 0.5, delta=DeltaGateConfig(theta_x=0.05,
+                                                       theta_h=0.05))
+    outs = {}
+    for backend in ("pallas", "ref"):
+        with use_backend(backend):
+            eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                              sparsity=pol)
+            packed, _ = eng.prepare(params)
+            outs[backend] = np.asarray(eng.generate(packed, prompt, G))
+    np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+
+
+def test_high_theta_reduces_occupancy():
+    cfg, model, params = _lm(num_layers=1)
+    B, P, G = 2, 8, 16
+    prompt = jax.random.randint(jax.random.key(4), (B, P), 0, cfg.vocab_size)
+    with use_backend("ref"):
+        eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                          sparsity=lstm_policy(
+                              0.875, 0.75,
+                              delta=DeltaGateConfig(theta_x=0.3,
+                                                    theta_h=0.3)))
+        packed, _ = eng.prepare(params)
+        _, state = eng.generate(packed, prompt, G, return_state=True)
+    occ = occupancy_report(state["cache"], steps=P + G, packed=packed)
+    assert occ["occupancy"] < 0.9
+    assert occ["ops_reduction"] > 1.1
+    assert occ["effective_macs"] < occ["packed_macs"]
+
+
+# ------------------------------------------------- scheduler (continuous)
+
+def test_scheduler_parity_with_delta_enabled():
+    """Θ=0 delta decode under the continuous-batching scheduler returns
+    the same tokens as the packed non-delta scheduler run."""
+    cfg, model, params = _lm(num_layers=1)
+    plan = lstm_policy(0.875, 0.75).compile(params)
+    pruned, masks = plan.prune(params)
+    packed, _ = plan.pack(pruned, masks)
+    reqs = [(4, 10), (9, 6), (6, 12)]
+
+    def run(m):
+        sched = ContinuousBatchingEngine(m, packed, slots=2, max_len=32,
+                                         sampling=SamplingConfig(), chunk=4)
+        for i, (plen, gen) in enumerate(reqs):
+            pr = jax.random.randint(jax.random.key(10 + i), (1, plen), 0,
+                                    cfg.vocab_size)
+            sched.submit(pr, gen)
+        return sched.run()
+
+    with use_backend("ref"):
+        base = run(model)
+        delta = run(model.with_delta(DeltaGateConfig()))
+    assert base.keys() == delta.keys()
+    for uid in base:
+        np.testing.assert_array_equal(base[uid], delta[uid])
