@@ -1,7 +1,31 @@
 """Shared benchmark utilities."""
+import os
 import time
 
 import jax
+
+# REPRO_BENCH_SMOKE=1 shrinks every module to CI-sized shapes/sweeps so
+# `python -m benchmarks.run` doubles as a bit-rot smoke test (the numbers
+# are meaningless at smoke size — only the code paths matter).
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def smoke(small, full):
+    """``small`` under REPRO_BENCH_SMOKE=1, else ``full``."""
+    return small if SMOKE else full
+
+
+def bench_lstm_dims():
+    """(B, P, G) shared by the serving benchmarks (CI-shrunk in smoke)."""
+    return smoke((2, 4, 8), (8, 16, 32))
+
+
+def bench_lstm_cfg():
+    """The shared small LSTM-LM benchmark model (CI-shrunk in smoke)."""
+    from repro.models import LSTMConfig
+    return LSTMConfig("bench", input_size=smoke(32, 128),
+                      hidden=smoke(64, 256), num_layers=1,
+                      vocab_size=smoke(64, 512))
 
 
 def time_call(fn, *args, warmup=2, iters=5):

@@ -19,19 +19,18 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.models import LSTMModel, LSTMConfig
+from repro.models import LSTMModel
 from repro.serving import (ServeEngine, ContinuousBatchingEngine,
                           SamplingConfig)
 from repro.sparse import (DeltaGateConfig, lstm_policy, occupancy_report,
                           use_backend)
-from .common import row, time_fn as _time
+from .common import bench_lstm_cfg, bench_lstm_dims, row, time_fn as _time
 
-B, P, G = 8, 16, 32
+B, P, G = bench_lstm_dims()
 
 
 def main():
-    cfg = LSTMConfig("bench", input_size=128, hidden=256, num_layers=1,
-                     vocab_size=512)
+    cfg = bench_lstm_cfg()
     model = LSTMModel(cfg)
     params = model.init(jax.random.key(0))
     plan = lstm_policy(0.875, 0.75, backend="ref").compile(params)

@@ -10,7 +10,7 @@ from repro.sparse import lstm_policy, mask_grads
 from repro.training import OptConfig, init_state, CharCorpus
 from repro.training.optim import apply_update
 from repro.core.metrics import perplexity
-from .common import row
+from .common import row, smoke
 
 
 def _train(model, params, ds, steps, masks=None, off=0):
@@ -34,7 +34,7 @@ def main():
     model = LSTMModel(cfg)
     ds = CharCorpus()
     params = model.init(jax.random.key(0))
-    params = _train(model, params, ds, 80)
+    params = _train(model, params, ds, smoke(6, 80))
 
     t = ds.batch(9999, 16, 24)["tokens"] % 30
     eval_b = {"inputs": jnp.asarray(t), "labels": jnp.asarray(t)}
@@ -45,13 +45,13 @@ def main():
     nx = 4 * 64 * 16
     nh = 4 * 64 * 64
     results = {}
-    for sx in (0.4, 0.5, 0.6, 0.7, 0.8):
+    for sx in smoke((0.5, 0.7), (0.4, 0.5, 0.6, 0.7, 0.8)):
         sh = (0.6 * (nx + nh) - sx * nx) / nh
         if not (0.0 <= sh <= 0.95):
             continue
         plan = lstm_policy(sx, sh).compile(params)
         pruned, masks = plan.prune(params)
-        retr = _train(model, pruned, ds, 40, masks=masks, off=500)
+        retr = _train(model, pruned, ds, smoke(4, 40), masks=masks, off=500)
         loss = float(model.loss(retr, eval_b))
         results[(round(sx, 2), round(sh, 2))] = loss
         row(f"fig4_spar_x={sx:.2f}_spar_h={sh:.2f}", 0.0,

@@ -10,7 +10,7 @@ from repro.sparse import get_format
 from repro.training import OptConfig, init_state, CharCorpus
 from repro.training.optim import apply_update
 from repro.core.sparsity import apply_mask
-from .common import row
+from .common import row, smoke
 
 # each pattern is a registered SparseFormat (+ its mask options)
 PATTERNS = {
@@ -31,7 +31,7 @@ def main():
                    schedule="constant")
     st = init_state(oc, params)
     lg = jax.jit(jax.value_and_grad(lambda p, b: model.loss(p, b)))
-    for i in range(80):
+    for i in range(smoke(6, 80)):
         t = ds.batch(i, 8, 24)["tokens"] % 30
         b = {"inputs": jnp.asarray(t), "labels": jnp.asarray(t)}
         _, g = lg(params, b)
@@ -42,7 +42,7 @@ def main():
     base = float(model.loss(params, eval_b))
     row("fig9_dense_baseline", 0.0, f"loss={base:.4f}")
 
-    for spar in (0.25, 0.5, 0.75, 0.875):
+    for spar in smoke((0.5, 0.875), (0.25, 0.5, 0.75, 0.875)):
         line = {}
         for name, (fmt_name, kw) in PATTERNS.items():
             fmt = get_format(fmt_name)

@@ -14,19 +14,18 @@ capped point) and reports, per Θ:
 """
 import jax
 
-from repro.models import LSTMModel, LSTMConfig
+from repro.models import LSTMModel
 from repro.serving import ServeEngine
 from repro.sparse import (DeltaGateConfig, lstm_policy, occupancy_report,
                           use_backend)
-from .common import row, time_fn
+from .common import bench_lstm_cfg, bench_lstm_dims, row, smoke, time_fn
 
-B, P, G = 8, 16, 32
-THETAS = (0.0, 0.02, 0.05, 0.1, 0.2, 0.5)
+B, P, G = bench_lstm_dims()
+THETAS = smoke((0.0, 0.1), (0.0, 0.02, 0.05, 0.1, 0.2, 0.5))
 
 
 def main():
-    cfg = LSTMConfig("bench", input_size=128, hidden=256, num_layers=1,
-                     vocab_size=512)
+    cfg = bench_lstm_cfg()
     model = LSTMModel(cfg)
     params = model.init(jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)

@@ -1,0 +1,79 @@
+"""fig_quant_tradeoff: quantization scheme × dual-ratio sparsity sweep.
+
+The arithmetic-fidelity axis of the reproduction, crossed with the paper's
+(Spar_x, Spar_h) axis: for each scheme (f32 baseline, symmetric int8,
+paper-style q1.11 fixed point) at each sparsity tuple this serves the
+LSTM LM through the engine and reports
+
+  weight_bytes   packed gate-weight bytes (values + indices + scales) —
+                 the decode hot path's HBM traffic, where int8 should cut
+                 ≥2x vs the f32 packing at matched sparsity
+  bytes_red      f32 packed bytes / quantized packed bytes (≥ 2x is the
+                 acceptance bar; ~3.5x typical for int8)
+  logit_mae      mean |logits_q − logits_f32| of the prefill logits on a
+                 shared prompt, relative to mean |logits_f32| — the
+                 fidelity cost of the narrowed arithmetic
+  tok/s          wall-clock serving throughput on this host (jnp ref
+                 formulations — interpret-mode Pallas measures Python)
+
+Weight-side sparsity, activation deltas, and value precision are three
+INDEPENDENT multipliers on effective bytes/ops; this figure isolates the
+third against the first.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LSTMModel
+from repro.serving import ServeEngine
+from repro.sparse import QuantConfig, lstm_policy, use_backend
+from .common import bench_lstm_cfg, bench_lstm_dims, row, smoke, time_fn
+
+B, P, G = bench_lstm_dims()
+SCHEMES = (None, "int8", "q1.11")
+SPARS = smoke(((0.875, 0.75),), ((0.875, 0.75), (0.75, 0.5)))
+
+
+def _weight_bytes(packed) -> int:
+    """Packed gate-weight storage across layers (values+indices+scales)."""
+    return sum(lp[k].memory_bytes()["total"]
+               for lp in packed["layers"] for k in ("w_x", "w_h"))
+
+
+def main():
+    cfg = bench_lstm_cfg()
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (B, P), 0,
+                                cfg.vocab_size)
+
+    with use_backend("ref"):
+        for spar_x, spar_h in SPARS:
+            base_bytes = base_logits = None
+            for scheme in SCHEMES:
+                quant = QuantConfig(scheme) if scheme else None
+                eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                                  sparsity=lstm_policy(spar_x, spar_h,
+                                                       quant=quant))
+                packed, _ = eng.prepare(params, calib=prompt)
+                wb = _weight_bytes(packed)
+                logits, _ = eng._prefill(packed, prompt, max_len=P + G)
+                if scheme is None:
+                    base_bytes, base_logits = wb, logits
+                    derived = f"weight_bytes={wb} (f32 baseline)"
+                else:
+                    mae = float(jnp.mean(jnp.abs(logits - base_logits)))
+                    ref = float(jnp.mean(jnp.abs(base_logits)))
+                    derived = (f"weight_bytes={wb} "
+                               f"bytes_red={base_bytes / wb:.2f}x "
+                               f"logit_mae={mae / max(ref, 1e-9):.4f}")
+                t = time_fn(lambda: eng.generate(packed, prompt, G))
+                tps = B * G / t
+                name = (f"quant_{scheme or 'f32'}"
+                        f"_sx={spar_x:g}_sh={spar_h:g}")
+                row(name, t / (B * G) * 1e6,
+                    derived + f" toks_per_s={tps:.0f}")
+
+
+if __name__ == "__main__":
+    main()

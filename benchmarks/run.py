@@ -5,10 +5,12 @@ import sys
 
 def main() -> None:
     from . import decode_throughput, fig4_dual_ratio, fig9_patterns, \
-        fig_delta_occupancy, table1_resources, table2_throughput
+        fig_delta_occupancy, fig_quant_tradeoff, table1_resources, \
+        table2_throughput
     print("name,us_per_call,derived")
     for mod in (table1_resources, table2_throughput, decode_throughput,
-                fig9_patterns, fig4_dual_ratio, fig_delta_occupancy):
+                fig9_patterns, fig4_dual_ratio, fig_delta_occupancy,
+                fig_quant_tradeoff):
         mod.main()
         sys.stdout.flush()
 

@@ -17,6 +17,8 @@ MODULES = (
     "repro.sparse.temporal",
     "repro.sparse.policy",
     "repro.sparse.backend",
+    "repro.quant.scheme",
+    "repro.quant.calibrate",
 )
 
 

@@ -4,6 +4,7 @@ This container executes on CPU; these numbers describe the TARGET chip that
 the dry-run artifacts are analysed against (per the assignment spec).
 """
 PEAK_BF16_FLOPS = 197e12       # per chip, bf16
+PEAK_INT8_OPS = 394e12         # per chip, int8 MACs (2x the bf16 MXU rate)
 HBM_BW = 819e9                 # bytes/s per chip
 ICI_BW = 50e9                  # bytes/s per link (~)
 VMEM_BYTES = 128 * 1024 * 1024 # ~128 MiB VMEM per chip (v5e ~128MB)

@@ -6,8 +6,11 @@ public wrappers (interpret=True on CPU, compiled on TPU).
 from .ops import (
     rb_spmv,
     rb_dual_spmv,
+    rb_spmv_q8,
+    rb_dual_spmv_q8,
     delta_rb_spmv,
     delta_rb_dual_spmv,
+    delta_rb_dual_spmv_q8,
     lstm_gates,
     flash_attention,
     decode_attention,

@@ -18,10 +18,13 @@ from . import ref as _ref
 from .rb_spmv import rb_spmv as _rb_spmv_kernel, rb_dual_spmv as _rb_dual_kernel
 from .delta_rb_spmv import (delta_rb_spmv as _delta_rb_spmv_kernel,
                             delta_rb_dual_spmv as _delta_rb_dual_kernel)
+from .rb_spmv_q8 import (rb_spmv_q8 as _rb_spmv_q8_kernel,
+                         rb_dual_parts_q8 as _rb_dual_parts_q8_kernel)
 from .lstm_gates import lstm_gates as _lstm_gates_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .decode_attention import decode_attention as _decode_kernel
 from ..core.packing import RowBalancedSparse
+from ..quant.scheme import quantize as _quantize
 from ..sparse import backend as _backend
 
 
@@ -116,6 +119,126 @@ def delta_rb_dual_spmv(sx: RowBalancedSparse, dx, fx,
     z = _delta_rb_dual_kernel(vx, dxi, dx, fx, vh, dhi, dh, fh, mp,
                               block_rows=block_rows, interpret=on_cpu())
     return z[:, :R] if padded else z
+
+
+# --------------------------------------------------------------- quantized
+
+def _quant_act(x, packed, act_scale):
+    """→ (codes, scale): quantize one activation batch for a q8 matvec.
+
+    ``act_scale`` None → the packing's scheme decides: fixed-point uses
+    its constant 2^-N; scaled schemes fall back to a dynamic per-call
+    max-abs (the calibrated static scales arrive through the model)."""
+    scheme = packed.scheme
+    sa = scheme.act_scale(act_scale)
+    if sa is None:
+        amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+        sa = jnp.maximum(amax / scheme.qmax, 1e-12)
+    return _quantize(x, sa, scheme), sa
+
+
+def rb_spmv_q8(s, x, *, act_scale=None, block_rows: int = 256,
+               backend: str | None = None):
+    """Quantized packed SpMV: int codes × int activation codes, int32
+    accumulate, per-row dequant. ``s``: RowBalancedSparseQ8; x (B, ncols)
+    float activations (quantized here, so pallas and ref consume the SAME
+    codes). Returns (B, rows) float32."""
+    qx, sa = _quant_act(x, s, act_scale)
+    if _resolve(backend, None) == "ref":
+        return _ref.rb_spmv_q8_ref(s, qx, sa)
+    R = s.rows
+    block_rows = min(block_rows, R)
+    vals, padded = _pad_rows(s.values, block_rows)
+    deltas, _ = _pad_rows(s.deltas, block_rows)
+    comb = (s.scales * sa).astype(jnp.float32)
+    if padded:
+        comb = jnp.pad(comb, (0, vals.shape[0] - R))
+    y = _rb_spmv_q8_kernel(vals, deltas, comb, qx, block_rows=block_rows,
+                           interpret=on_cpu())
+    return y[:, :R] if padded else y
+
+
+def _dual_parts_q8(sx, qx, sax, sh, qh, sah, block_rows):
+    """Run the two-family q8 kernel (padding to block multiples) →
+    (zx, zh) dequantized partial sums, both (B, rows) f32."""
+    R = sx.rows
+    block_rows = min(block_rows, R)
+    vx, padded = _pad_rows(sx.values, block_rows)
+    dxi, _ = _pad_rows(sx.deltas, block_rows)
+    vh, _ = _pad_rows(sh.values, block_rows)
+    dhi, _ = _pad_rows(sh.deltas, block_rows)
+    cx = (sx.scales * sax).astype(jnp.float32)
+    ch = (sh.scales * sah).astype(jnp.float32)
+    if padded:
+        pad = vx.shape[0] - R
+        cx, ch = jnp.pad(cx, (0, pad)), jnp.pad(ch, (0, pad))
+    zx, zh = _rb_dual_parts_q8_kernel(vx, dxi, cx, qx, vh, dhi, ch, qh,
+                                      block_rows=block_rows,
+                                      interpret=on_cpu())
+    return (zx[:, :R], zh[:, :R]) if padded else (zx, zh)
+
+
+def rb_dual_spmv_q8(sx, x, sh, h, bias, *, act_scale_x=None,
+                    act_scale_h=None, block_rows: int = 256,
+                    backend: str | None = None):
+    """z = dq(Sx@qx) + dq(Sh@qh) + bias — the quantized dual-ratio gate
+    preactivation (each family dequantized by its own row × act scales).
+    Returns (B, rows) float32."""
+    qx, sax = _quant_act(x, sx, act_scale_x)
+    qh, sah = _quant_act(h, sh, act_scale_h)
+    if _resolve(backend, None) == "ref":
+        return _ref.rb_dual_spmv_q8_ref(sx, qx, sax, sh, qh, sah, bias)
+    zx, zh = _dual_parts_q8(sx, qx, sax, sh, qh, sah, block_rows)
+    return zx + zh + bias.astype(jnp.float32)[None, :]
+
+
+def delta_rb_dual_spmv_q8(sx, dx, fx, sh, dh, fh, m, *, act_scale_x=None,
+                          act_scale_h=None, block_rows: int = 256,
+                          backend: str | None = None):
+    """m' = m + dq(Sx@q(fx·dx)) + dq(Sh@q(fh·dh)) — the quantized fused
+    temporal-delta gate accumulation. Deltas are masked BEFORE quantizing,
+    so unfired columns carry exact 0 codes into the int32 accumulation;
+    ``m`` stays the fp32 partial-sum memory. Returns (B, rows) float32."""
+    dxm = jnp.where(fx.astype(bool), dx, 0).astype(dx.dtype)
+    dhm = jnp.where(fh.astype(bool), dh, 0).astype(dh.dtype)
+    qdx, sax = _quant_act(dxm, sx, act_scale_x)
+    qdh, sah = _quant_act(dhm, sh, act_scale_h)
+    if _resolve(backend, None) == "ref":
+        return _ref.delta_rb_dual_spmv_q8_ref(sx, qdx, sax, sh, qdh, sah, m)
+    zx, zh = _dual_parts_q8(sx, qdx, sax, sh, qdh, sah, block_rows)
+    return m.astype(jnp.float32) + zx + zh
+
+
+def brds_lstm_step_q8(sx, x, sh, h_prev, bias, c_prev, *, act_scale_x=None,
+                      act_scale_h=None, pwl: bool = False,
+                      block_rows: int = 256, backend: str | None = None):
+    """One quantized BRDS-LSTM inference step: the q8 dual-ratio SpMV
+    (int32 accumulate + per-row dequant) feeding the Function module.
+    Returns (c, h)."""
+    z = rb_dual_spmv_q8(sx, x, sh, h_prev, bias, act_scale_x=act_scale_x,
+                        act_scale_h=act_scale_h, block_rows=block_rows,
+                        backend=backend)
+    H = z.shape[-1] // 4
+    return lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
+                      z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
+
+
+def brds_delta_lstm_step_q8(sx, dx, fx, sh, dh, fh, m_prev, bias, c_prev,
+                            *, act_scale_x=None, act_scale_h=None,
+                            pwl: bool = False, block_rows: int = 256,
+                            backend: str | None = None):
+    """One quantized temporally-sparse BRDS-LSTM step: fired-column
+    quantized products advance the fp32 partial-sum memory, bias applies
+    on top, the Function module closes the cell. Returns (c, h, m)."""
+    m = delta_rb_dual_spmv_q8(sx, dx, fx, sh, dh, fh, m_prev,
+                              act_scale_x=act_scale_x,
+                              act_scale_h=act_scale_h,
+                              block_rows=block_rows, backend=backend)
+    z = m + bias.astype(jnp.float32)[None, :]
+    H = z.shape[-1] // 4
+    c, h = lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
+                      z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
+    return c, h, m
 
 
 def brds_delta_lstm_step(sx: RowBalancedSparse, dx, fx,

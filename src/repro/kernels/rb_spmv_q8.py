@@ -1,0 +1,143 @@
+"""Pallas TPU kernels: QUANTIZED packed row-balanced SpMV.
+
+The arithmetic-fidelity half of the BRDS datapath: the FPGA evaluates its
+pruned LSTMs in fixed point (ESE ships 12-bit sparse weights, Spartus a
+fixed-point spatio-temporal sparse LSTM), and on the TPU the same move
+pays twice —
+
+- the decode hot path is MEMORY bound, so int8 codes stream 4× fewer
+  weight bytes HBM→VMEM than f32 (2× for an int16-stored qM.N), on top of
+  the 1/(1-sparsity) packing gain;
+- int8 × int8 products accumulate in int32 on the MXU at twice the bf16
+  rate (``hw.PEAK_INT8_OPS``).
+
+Kernel structure mirrors the float kernels (rb_spmv / delta_rb_spmv) so
+every invariant survives quantization: identical per-row work (row
+balance), delta-encoded columns rebuilt by an in-register cumsum
+(relative addressing — quantization never moves a column), and the dual
+variants advancing both weight families in the same grid step (Large/
+Small mult-array lockstep). New here is the epilogue: the int32
+accumulator is dequantized by ONE multiply per row — the per-row weight
+scale pre-combined with the static activation scale — landing in the
+existing fp32 partial-sum memory.
+
+The wrappers (kernels.ops) quantize the activations; the kernels consume
+integer codes only, so pallas↔ref parity is EXACT (integer accumulation
+has no float re-association to disagree about).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .rb_spmv import DEF_BLOCK_ROWS
+
+
+def _rb_spmv_q8_kernel(qx_ref, vals_ref, deltas_ref, scales_ref, out_ref):
+    """Grid step: one block of rows. qx (B, X) int codes; vals/deltas
+    (bR, K); scales (1, bR) combined row·act dequant; out (B, bR) f32."""
+    cols = jnp.cumsum(deltas_ref[...].astype(jnp.int32), axis=1)   # (bR, K)
+    g = jnp.take(qx_ref[...].astype(jnp.int32), cols, axis=1)      # (B, bR, K)
+    v = vals_ref[...].astype(jnp.int32)                            # (bR, K)
+    acc = jnp.sum(g * v[None, :, :], axis=-1)                      # int32
+    out_ref[...] = acc.astype(jnp.float32) * scales_ref[...][0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rb_spmv_q8(values, deltas, scales, qx, *,
+               block_rows: int = DEF_BLOCK_ROWS, interpret: bool = True):
+    """y[b, r] = scales[r] · Σ_k values[r, k] · qx[b, cols[r, k]].
+
+    values: (R, K) int codes; deltas: (R, K) int8/16/32; scales: (R,)
+    f32 combined (per-row weight scale × activation scale); qx: (B, X)
+    int activation codes. Products accumulate in int32; the per-row
+    dequant is the only float op. Returns (B, R) float32.
+    """
+    R, K = values.shape
+    B, X = qx.shape
+    assert scales.shape == (R,), (scales.shape, R)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _rb_spmv_q8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, X), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        interpret=interpret,
+    )(qx, values, deltas, scales.reshape(1, R))
+
+
+def _rb_dual_parts_q8_kernel(qx_ref, qh_ref, vx_ref, ix_ref, sx_ref,
+                             vh_ref, ih_ref, sh_ref, zx_ref, zh_ref):
+    """One row block of the dual-family quantized MxV: both packed
+    families advance in the same step (Large/Small MA lockstep), each
+    int32 accumulator dequantizes with its own per-row scales.
+
+    The kernel emits the TWO dequantized partial sums (zx, zh) instead of
+    their total: the epilogue is then multiply-only, so XLA cannot
+    FMA-contract a dequant multiply into an add and drift a last bit away
+    from the reference twins — the wrapper performs the (shared, exact-
+    order) adds. Integer work stays fully in-kernel."""
+    colsx = jnp.cumsum(ix_ref[...].astype(jnp.int32), axis=1)
+    colsh = jnp.cumsum(ih_ref[...].astype(jnp.int32), axis=1)
+    gx = jnp.take(qx_ref[...].astype(jnp.int32), colsx, axis=1)
+    gh = jnp.take(qh_ref[...].astype(jnp.int32), colsh, axis=1)
+    accx = jnp.sum(gx * vx_ref[...].astype(jnp.int32)[None], axis=-1)
+    acch = jnp.sum(gh * vh_ref[...].astype(jnp.int32)[None], axis=-1)
+    zx_ref[...] = accx.astype(jnp.float32) * sx_ref[...][0][None, :]
+    zh_ref[...] = acch.astype(jnp.float32) * sh_ref[...][0][None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def rb_dual_parts_q8(vals_x, deltas_x, scales_x, qx, vals_h, deltas_h,
+                     scales_h, qh, *, block_rows: int = DEF_BLOCK_ROWS,
+                     interpret: bool = True):
+    """(zx, zh) = (dq(Sx @ qx), dq(Sh @ qh)) — the quantized dual-ratio
+    MxV pair underlying both the gate preactivation
+    (``ops.rb_dual_spmv_q8``: zx + zh + bias) and the temporal partial-sum
+    update (``ops.delta_rb_dual_spmv_q8``: m + zx + zh).
+
+    scales_*: (R,) f32 combined (row × activation) dequant scales;
+    qx (B, X) / qh (B, H) int codes. Returns two (B, R) float32 arrays.
+    """
+    R, Kx = vals_x.shape
+    _, Kh = vals_h.shape
+    B, X = qx.shape
+    H = qh.shape[1]
+    assert vals_h.shape[0] == R
+    assert scales_x.shape == (R,) and scales_h.shape == (R,)
+    assert R % block_rows == 0, (R, block_rows)
+    grid = (R // block_rows,)
+    return pl.pallas_call(
+        _rb_dual_parts_q8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, X), lambda i: (0, 0)),
+            pl.BlockSpec((B, H), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, Kx), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Kx), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+            pl.BlockSpec((block_rows, Kh), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, Kh), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_rows), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+            pl.BlockSpec((B, block_rows), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, R), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qx, qh, vals_x, deltas_x, scales_x.reshape(1, R), vals_h, deltas_h,
+      scales_h.reshape(1, R))

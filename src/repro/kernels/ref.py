@@ -67,6 +67,49 @@ def delta_rb_dual_spmv_ref(sx: RowBalancedSparse, dx: jnp.ndarray,
     return z.astype(m.dtype)
 
 
+# ------------------------------------------------------------ quantized
+
+def rb_spmv_q8_ref(s, qx: jnp.ndarray, act_scale) -> jnp.ndarray:
+    """Quantized packed SpMV oracle: integer products, int32 accumulate,
+    one dequant multiply per row.
+
+    ``s``: a :class:`repro.quant.RowBalancedSparseQ8` (int codes + f32
+    per-row scales); ``qx`` (B, ncols) int activation codes; ``act_scale``
+    the scalar activation scale. Returns (B, rows) float32 =
+    ``(Σ_k codes · qx) · (row_scale · act_scale)``. The accumulation is
+    exact integer arithmetic, so the Pallas kernel matches bit-for-bit.
+    """
+    cols = s.col_indices()                                  # (R, K)
+    # keep the codes at their storage width into the dot (s8/s16 operands,
+    # int32 accumulation via preferred_element_type): exact integer math,
+    # and the compiled HLO shows an int8-operand dot so the roofline's
+    # int8 bucket (roofline.int8_dot_flops) costs it at the int8 peak
+    g = jnp.take(qx, cols, axis=1)                          # (B, R, K)
+    acc = jnp.einsum("brk,rk->br", g, s.values,
+                     preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * (s.scales * act_scale)[None, :]
+
+
+def rb_dual_spmv_q8_ref(sx, qx, ax, sh, qh, ah,
+                        bias: jnp.ndarray) -> jnp.ndarray:
+    """Quantized dual-ratio gate preactivation oracle:
+    z = dq(Sx@qx) + dq(Sh@qh) + bias, each family dequantized with its own
+    combined (row × activation) scales. Returns (B, rows) float32."""
+    return (rb_spmv_q8_ref(sx, qx, ax) + rb_spmv_q8_ref(sh, qh, ah)
+            + bias.astype(jnp.float32)[None, :])
+
+
+def delta_rb_dual_spmv_q8_ref(sx, qdx, ax, sh, qdh, ah,
+                              m: jnp.ndarray) -> jnp.ndarray:
+    """Quantized temporal partial-sum update oracle:
+    m' = m + dq(Sx@qdx) + dq(Sh@qdh). ``qdx``/``qdh`` are int codes of the
+    MASKED deltas (exact 0 where unfired — a zero code contributes a zero
+    integer product, the skip a delta accelerator never issues). ``m``
+    (B, rows) float32; bias NOT folded (the caller adds it per step)."""
+    return (m.astype(jnp.float32) + rb_spmv_q8_ref(sx, qdx, ax)
+            + rb_spmv_q8_ref(sh, qdh, ah))
+
+
 # ---------------------------------------------------------------- lstm cell
 
 def pwl_tables(n_seg: int = 16, lo: float = -8.0, hi: float = 8.0):

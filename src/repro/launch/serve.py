@@ -7,6 +7,8 @@ Serves every DecodeStep model — the transformer zoo AND the paper's LSTMs
       --prompt-len 64 --gen 32 --batch 4
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke --brds
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
+      --brds --quant int8
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
       --brds --continuous --slots 4
 """
 from __future__ import annotations
@@ -29,6 +31,9 @@ def _build(args):
     if args.delta is None and (args.delta_h is not None
                                or args.occupancy is not None):
         raise SystemExit("--delta-h/--occupancy require --delta")
+    if args.quant is not None and not args.brds:
+        raise SystemExit("--quant requires --brds (quantization rides the "
+                         "packed row-balanced weights)")
     if args.arch in LSTM_CONFIGS:
         cfg = LSTM_CONFIGS[args.arch]
         if args.smoke:
@@ -38,7 +43,7 @@ def _build(args):
             raise SystemExit(f"{args.arch} is not a language model")
         sparsity = None
         if args.brds or args.delta is not None:
-            from repro.sparse import lstm_policy, DeltaGateConfig
+            from repro.sparse import lstm_policy, DeltaGateConfig, QuantConfig
             delta = None
             if args.delta is not None:
                 delta = DeltaGateConfig(
@@ -46,17 +51,21 @@ def _build(args):
                     theta_h=args.delta_h if args.delta_h is not None
                     else args.delta,
                     cap_x=args.occupancy, cap_h=args.occupancy)
+            quant = QuantConfig(args.quant) if args.quant else None
             # ratio 0 compiles to an empty weight plan, so --delta without
             # --brds serves dense weights with temporal skipping only
             sparsity = lstm_policy(args.spar_a if args.brds else 0.0,
                                    args.spar_b if args.brds else 0.0,
-                                   delta=delta)
+                                   delta=delta, quant=quant)
         return (LSTMModel(cfg), cfg, cfg.vocab_size, sparsity,
                 lambda rng, batch: None)
 
     if args.delta is not None:
         raise SystemExit("--delta is LSTM-only (temporal sparsity rides "
                          "the recurrent decode cache)")
+    if args.quant is not None:
+        raise SystemExit("--quant is LSTM-only (quantization rides the "
+                         "packed LSTM decode path)")
     from repro.configs import get_arch, smoke_config
     from repro.models import build_model
     cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
@@ -101,11 +110,18 @@ def main():
     ap.add_argument("--occupancy", type=float, default=None, metavar="CAP",
                     help="cap the fired-column fraction per step "
                          "(hardware worst-case bound)")
+    ap.add_argument("--quant", default=None, metavar="SCHEME",
+                    help="LSTM only, requires --brds: serve fixed-point "
+                         "quantized packed weights ('int8' or paper-style "
+                         "'qM.N', e.g. 'q1.11'); activation scales are "
+                         "calibrated on a prompt-shaped batch")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="sparse-kernel backend for packed decode")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass in (0, 1); 0 disables")
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--continuous", action="store_true",
                     help="serve a ragged request stream through the "
@@ -127,12 +143,19 @@ def main():
     max_len = args.prompt_len + args.gen
     eng = ServeEngine(model, cfg, max_len=max_len, batch=args.batch,
                       sparsity=sparsity)
-    params, brds_report = eng.prepare(params)
+    calib = None
+    if args.quant:
+        # calibrate activation scales on a prompt-shaped batch through the
+        # dense params (prepare prunes/packs afterwards)
+        calib = jax.random.randint(jax.random.key(3),
+                                   (args.batch, min(args.prompt_len, 32)),
+                                   0, vocab)
+    params, brds_report = eng.prepare(params, calib=calib)
     if brds_report is not None:
         print("BRDS:", brds_report)
     rng = jax.random.key(1)
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
-                              eos_id=args.eos_id)
+                              top_p=args.top_p, eos_id=args.eos_id)
 
     if args.continuous:
         # eng.model carries the delta wiring applied by prepare

@@ -19,6 +19,7 @@ from . import layers as L
 from ..core import sparsity as S
 from ..core.packing import RowBalancedSparse
 from ..kernels import ops as K
+from ..quant import RowBalancedSparseQ8, quantize_packed, parse_scheme
 from ..sparse import get_format, lstm_policy
 from ..sparse import mask_grads as _sparse_mask_grads
 from ..sparse.temporal import delta_threshold
@@ -46,16 +47,29 @@ class LSTMModel:
     m, and fired-column counters (nx, nh), and prefill/decode step through
     ``_delta_step`` — only columns whose activation delta crossed Θ
     contribute matvec products (``kernels.ops.delta_rb_spmv`` on packed
-    params, masked einsum on dense ones)."""
+    params, masked einsum on dense ones).
 
-    def __init__(self, cfg: LSTMConfig, delta=None):
+    ``quant`` (a ``repro.quant.QuantPlan`` or None) carries the calibrated
+    per-layer activation scales for quantized packed params
+    (RowBalancedSparseQ8 leaves): every step dispatches the q8 kernels
+    (integer products, int32 accumulate, per-row dequant). Quantized
+    params without a plan still serve — the kernels fall back to dynamic
+    max-abs activation scales."""
+
+    def __init__(self, cfg: LSTMConfig, delta=None, quant=None):
         self.cfg = cfg
         self.delta = delta
+        self.quant = quant
 
     def with_delta(self, delta) -> "LSTMModel":
         """Copy of this model serving through the temporal-delta path
         (``delta``: a DeltaGateConfig, or None to disable)."""
-        return LSTMModel(self.cfg, delta=delta)
+        return LSTMModel(self.cfg, delta=delta, quant=self.quant)
+
+    def with_quant(self, quant) -> "LSTMModel":
+        """Copy of this model carrying a quantization plan
+        (``quant``: a repro.quant.QuantPlan, or None to disable)."""
+        return LSTMModel(self.cfg, delta=self.delta, quant=quant)
 
     # ------------------------------------------------------------- params
     def param_defs(self) -> dict:
@@ -176,7 +190,7 @@ class LSTMModel:
                                "w_h": S.apply_mask(g["w_h"], m["w_h"])})
         return {**grads, "layers": new_layers}
 
-    def pack(self, params, masks: dict | None = None):
+    def pack(self, params, masks: dict | None = None, quant=None):
         """Pack pruned layers into RowBalancedSparse pairs for serving.
 
         ``masks`` is the {path: mask} dict from ``prune`` — packing from
@@ -184,8 +198,14 @@ class LSTMModel:
         zero and preserves the row-balance accounting. With masks=None the
         survivors are re-selected per row by magnitude at the maximum
         per-row non-zero count (ties resolve to zeros, so rows stay
-        balanced even if some survivors vanished during retraining)."""
+        balanced even if some survivors vanished during retraining).
+        ``quant`` (a scheme name like ``"int8"``/``"q1.11"``, a
+        QuantScheme, or a QuantConfig) additionally quantizes each packed
+        matrix to RowBalancedSparseQ8 (integer codes + per-row scales)."""
         fmt = get_format("row_balanced")
+        scheme = None
+        if quant is not None:
+            scheme = parse_scheme(getattr(quant, "scheme", quant))
         packed = []
         for i, lp in enumerate(params["layers"]):
             entry = {"b": lp["b"]}
@@ -193,7 +213,8 @@ class LSTMModel:
                 m = (masks or {}).get(f"layers/{i}/{key}")
                 if m is None:
                     m = _survivor_mask(lp[key])
-                entry[out] = fmt.pack(lp[key], m)
+                s = fmt.pack(lp[key], m)
+                entry[out] = quantize_packed(s, scheme) if scheme else s
             packed.append(entry)
         return packed
 
@@ -207,19 +228,36 @@ class LSTMModel:
                     for lp in packed["layers"]]
         return packed
 
+    def _act_scales(self, i: int):
+        """Calibrated (s_x, s_h) activation scales for layer ``i``, or
+        (None, None) — the q8 kernels then fall back to dynamic max-abs
+        (scaled schemes) / the fixed-point constant."""
+        if self.quant is None or i >= self.quant.num_layers:
+            return (None, None)
+        return self.quant.scale_for(i)
+
     def sparse_step(self, packed, x_t, state, *, backend: str | None = None):
         """One inference time step on the packed BRDS path.
 
         x_t (B, X); state: list of (c, h) per layer. The dual-ratio fused
         kernel is the accelerator's Gate module; lstm_gates is Function.
         ``packed`` is model.pack's per-layer list or a SparsityPlan.pack'd
-        param tree."""
+        param tree; quantized packings (RowBalancedSparseQ8) run the q8
+        datapath."""
         new_state = []
         inp = x_t
-        for lp, (c, h) in zip(self._packed_layers(packed), state):
-            c, h = K.brds_lstm_step(lp["sx"], inp, lp["sh"], h, lp["b"], c,
-                                    pwl=self.cfg.pwl_activations,
-                                    backend=backend)
+        for i, (lp, (c, h)) in enumerate(zip(self._packed_layers(packed),
+                                             state)):
+            if isinstance(lp["sx"], RowBalancedSparseQ8):
+                ax, ah = self._act_scales(i)
+                c, h = K.brds_lstm_step_q8(
+                    lp["sx"], inp, lp["sh"], h, lp["b"], c,
+                    act_scale_x=ax, act_scale_h=ah,
+                    pwl=self.cfg.pwl_activations, backend=backend)
+            else:
+                c, h = K.brds_lstm_step(lp["sx"], inp, lp["sh"], h, lp["b"],
+                                        c, pwl=self.cfg.pwl_activations,
+                                        backend=backend)
             new_state.append((c, h))
             inp = h
         return inp, new_state
@@ -247,12 +285,18 @@ class LSTMModel:
     # pair per layer IS the decode cache. decode_step dispatches on the
     # param leaves: SparsityPlan.pack'd trees (w_x/w_h are
     # RowBalancedSparse) run the packed rb_dual_spmv + lstm_gates
-    # accelerator datapath; dense trees run the reference einsum step.
+    # accelerator datapath, quantized trees (RowBalancedSparseQ8) the q8
+    # int32-accumulate datapath; dense trees run the reference einsum step.
     supports_packed_decode = True
 
     @staticmethod
     def is_packed(params) -> bool:
-        return isinstance(params["layers"][0]["w_x"], RowBalancedSparse)
+        return isinstance(params["layers"][0]["w_x"],
+                          (RowBalancedSparse, RowBalancedSparseQ8))
+
+    @staticmethod
+    def is_quantized(params) -> bool:
+        return isinstance(params["layers"][0]["w_x"], RowBalancedSparseQ8)
 
     def cache_defs(self, batch: int, max_len: int) -> dict:
         """Decode-cache declaration (a PSpec pytree).
@@ -298,10 +342,17 @@ class LSTMModel:
         list of (c, h); returns (h_last, new_state) in cfg.dtype."""
         cfg = self.cfg
         packed = self.is_packed(params)
+        quantized = packed and self.is_quantized(params)
         new_state = []
         inp = x_t
-        for lp, (c, h) in zip(params["layers"], state):
-            if packed:
+        for i, (lp, (c, h)) in enumerate(zip(params["layers"], state)):
+            if quantized:
+                ax, ah = self._act_scales(i)
+                c, h = K.brds_lstm_step_q8(lp["w_x"], inp, lp["w_h"], h,
+                                           lp["b"], c, act_scale_x=ax,
+                                           act_scale_h=ah,
+                                           pwl=cfg.pwl_activations)
+            elif packed:
                 c, h = K.brds_lstm_step(lp["w_x"], inp, lp["w_h"], h,
                                         lp["b"], c,
                                         pwl=cfg.pwl_activations)
@@ -326,14 +377,28 @@ class LSTMModel:
         cfg = self.cfg
         d = self.delta
         packed = self.is_packed(params)
+        quantized = packed and self.is_quantized(params)
         new_state = []
         inp = x_t
-        for lp, st in zip(params["layers"], state):
+        for i, (lp, st) in enumerate(zip(params["layers"], state)):
             dx, fx, x_ref = delta_threshold(inp, st["x_ref"], d.theta_x,
                                             d.cap_x)
             dh, fh, h_ref = delta_threshold(st["h"], st["h_ref"], d.theta_h,
                                             d.cap_h)
-            if packed:
+            if quantized:
+                ax, ah = self._act_scales(i)
+                # the calibrated scales bound ABSOLUTE activations; a
+                # delta spans up to twice that range (−amax → +amax), and
+                # a clipped delta bakes its error into the partial-sum
+                # memory permanently — double the scale on this path
+                # (fixed-point schemes ignore it: they saturate by design)
+                ax = None if ax is None else 2.0 * ax
+                ah = None if ah is None else 2.0 * ah
+                c, h, m = K.brds_delta_lstm_step_q8(
+                    lp["w_x"], dx, fx, lp["w_h"], dh, fh, st["m"], lp["b"],
+                    st["c"], act_scale_x=ax, act_scale_h=ah,
+                    pwl=cfg.pwl_activations)
+            elif packed:
                 c, h, m = K.brds_delta_lstm_step(
                     lp["w_x"], dx, fx, lp["w_h"], dh, fh, st["m"], lp["b"],
                     st["c"], pwl=cfg.pwl_activations)

@@ -1,0 +1,32 @@
+"""repro.quant — fixed-point inference quantization.
+
+The arithmetic-fidelity axis of the reproduction, composed with both
+sparsity axes (row-balanced weights × temporal deltas):
+
+  scheme    — QuantScheme number formats (symmetric ``int8``, paper-style
+              ``qM.N`` fixed point), quantize/dequantize, per-row scales
+  formats   — RowBalancedSparseQ8 packed storage (integer codes + f32
+              per-row scales + the UNCHANGED delta-encoded columns) and
+              the registered ``row_balanced_q8`` SparseFormat
+  calibrate — QuantConfig (the policy's ``quant=`` rule) → QuantPlan
+              (static per-layer activation scales) via a max-abs /
+              percentile pass over a calibration batch
+
+The packed codes feed the Pallas q8 kernels (``kernels.rb_spmv_q8``:
+integer products, int32 accumulation, per-row dequant into the fp32
+partial-sum memory); ``SparsityPolicy(..., quant=QuantConfig(...))``
+threads the whole thing through prune → pack → serve.
+"""
+from .calibrate import QuantConfig, QuantPlan, calibrate_lstm, default_plan
+from .formats import (RowBalancedQ8Format, RowBalancedSparseQ8,
+                      abstract_quantize_packed, dequantize_packed,
+                      packed_bytes_q, quantize_packed)
+from .scheme import (QuantScheme, dequantize, parse_scheme, quantize,
+                     row_scales)
+
+__all__ = [
+    "QuantScheme", "parse_scheme", "quantize", "dequantize", "row_scales",
+    "RowBalancedSparseQ8", "RowBalancedQ8Format", "quantize_packed",
+    "dequantize_packed", "abstract_quantize_packed", "packed_bytes_q",
+    "QuantConfig", "QuantPlan", "calibrate_lstm", "default_plan",
+]

@@ -1,0 +1,150 @@
+"""Calibration: QuantConfig (the policy rule) → QuantPlan (the deployment).
+
+Weight scales come out of the weights themselves at pack time (per-row
+max-abs — see ``quantize_packed``); the ACTIVATION scales need data. The
+calibration pass runs the dense model over a calibration batch, collects
+per-layer input (x-path) and hidden-state (h-path) magnitude statistics,
+and freezes one static float scale per (layer, path) into a ``QuantPlan``
+— a hashable declaration the model carries, so the decode loop compiles
+the scales in as constants (no per-step max reductions on the hot path).
+
+Fixed-point (qM.N) schemes skip statistics entirely: every scale is the
+format's 2^-N, exactly like the FPGA datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from .scheme import QuantScheme, parse_scheme
+
+__all__ = ["QuantConfig", "QuantPlan", "calibrate_lstm", "default_plan"]
+
+_METHODS = ("absmax", "percentile")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """The policy-side quantization rule (what to do, not yet the scales).
+
+    Parameters
+    ----------
+    scheme : str
+        ``"int8"`` (symmetric, per-row weight scales, calibrated
+        activation scales) or ``"qM.N"`` fixed point (e.g. ``"q1.11"``).
+    method : {"absmax", "percentile"}
+        Activation-scale statistic over the calibration batch. Percentile
+        clips outliers (the usual post-training-quantization trick);
+        max-abs guarantees no activation clipping on the batch.
+    percentile : float
+        The percentile of |activation| used when ``method="percentile"``.
+
+    Examples
+    --------
+    >>> QuantConfig("int8").resolved.qmax
+    127
+    >>> QuantConfig("q1.11", method="percentile", percentile=99.0).method
+    'percentile'
+    """
+
+    scheme: str = "int8"
+    method: str = "absmax"
+    percentile: float = 99.9
+
+    def __post_init__(self):
+        parse_scheme(self.scheme)  # validate early
+        if self.method not in _METHODS:
+            raise ValueError(f"method must be one of {_METHODS}, "
+                             f"got {self.method!r}")
+        if not (0.0 < self.percentile <= 100.0):
+            raise ValueError(f"percentile must be in (0, 100], "
+                             f"got {self.percentile}")
+
+    @property
+    def resolved(self) -> QuantScheme:
+        return parse_scheme(self.scheme)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """Calibration output: the scheme plus per-layer activation scales.
+
+    ``act_scales`` is a tuple of ``(s_x, s_h)`` float pairs, one per LSTM
+    layer — static (hashable) so the plan can live on the model object
+    and key jit caches. ``scale_for(i)`` is what the decode step feeds
+    the q8 kernel wrappers."""
+
+    scheme: QuantScheme
+    act_scales: tuple
+
+    def scale_for(self, layer: int) -> tuple[float, float]:
+        return self.act_scales[layer]
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.act_scales)
+
+
+def _act_scale(x, cfg: QuantConfig, scheme: QuantScheme) -> float:
+    """One static activation scale from a batch of activations."""
+    if scheme.frac_bits is not None:
+        return scheme.fixed_scale
+    a = np.abs(np.asarray(x, np.float32))
+    amax = (float(np.percentile(a, cfg.percentile))
+            if cfg.method == "percentile" else float(a.max()))
+    return (amax / scheme.qmax) if amax > 0 else 1.0 / scheme.qmax
+
+
+def calibrate_lstm(model, params, tokens, cfg: QuantConfig) -> QuantPlan:
+    """Run the dense LSTM over a calibration batch and freeze act scales.
+
+    Parameters
+    ----------
+    model : LSTMModel
+        The model to calibrate (its dense scan path is used).
+    params : pytree
+        DENSE params — calibration happens before prune/pack so the
+        statistics see the deployment's embedding/hidden distributions.
+    tokens : jnp.ndarray
+        (B, S) token ids (LM) or (B, S, X) feature frames.
+    cfg : QuantConfig
+        Scheme + statistic.
+
+    Returns
+    -------
+    QuantPlan
+        Per-layer ``(s_x, s_h)`` activation scales.
+    """
+    from ..models import layers as L
+    scheme = cfg.resolved
+    cfgm = model.cfg
+    if cfgm.vocab_size:
+        x = L.embed_apply(params["embed"], tokens)
+    else:
+        x = tokens.astype(cfgm.dtype)
+    B = x.shape[0]
+    scales = []
+    for lp in params["layers"]:
+        s_x = _act_scale(x, cfg, scheme)
+        c0 = jnp.zeros((B, cfgm.hidden), cfgm.dtype)
+        h0 = jnp.zeros((B, cfgm.hidden), cfgm.dtype)
+        hs, _ = model._scan_layer(lp, x, c0, h0)
+        s_h = _act_scale(hs, cfg, scheme)
+        scales.append((s_x, s_h))
+        x = hs
+    return QuantPlan(scheme=scheme, act_scales=tuple(scales))
+
+
+def default_plan(cfg: QuantConfig, num_layers: int) -> QuantPlan:
+    """Calibration-free fallback when no batch is available.
+
+    Fixed-point schemes need none (scales are 2^-N by construction). For
+    scaled schemes the assumed |activation| bound is 1.0 — exact for the
+    tanh-bounded hidden path, a guess for the input path (prefer a real
+    calibration batch when embeddings can exceed unit range)."""
+    scheme = cfg.resolved
+    s = scheme.fixed_scale if scheme.frac_bits is not None \
+        else 1.0 / scheme.qmax
+    return QuantPlan(scheme=scheme, act_scales=((s, s),) * num_layers)

@@ -1,0 +1,215 @@
+"""Quantized packed storage: RowBalancedSparseQ8 + the registered format.
+
+``RowBalancedSparseQ8`` is the quantized twin of
+:class:`repro.core.packing.RowBalancedSparse`: the SAME delta-encoded
+column indices (the relative-addressing layout is orthogonal to value
+precision), integer value codes instead of floats, and one float32 dequant
+scale per row — scales ride the row-balanced layout because every row has
+exactly K codes, so ``scales[r]`` multiplies a whole (B, K) gather tile in
+the kernel's int32→fp32 epilogue.
+
+Weight bytes on the decode hot path (the memory-bound regime the ROADMAP
+targets) shrink by itemsize(f32)/itemsize(codes): 4× for int8, 2× for a
+qM.N stored in int16 — multiplying with the 1/(1-sparsity) packing gain.
+
+``row_balanced_q8`` is also a registered :class:`repro.sparse.SparseFormat`
+so a policy rule can name it directly
+(``("row_balanced_q8", 0.875, {"scheme": "q1.11"})``); the usual entry
+point, though, is the policy-level ``quant=`` rule which quantizes every
+row-balanced site at ``SparsityPlan.pack`` time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import packing as P
+from ..core import sparsity as S
+from ..sparse.formats import SparseFormat, register
+from .scheme import QuantScheme, parse_scheme, quantize, row_scales
+
+__all__ = ["RowBalancedSparseQ8", "quantize_packed", "dequantize_packed",
+           "abstract_quantize_packed", "packed_bytes_q",
+           "RowBalancedQ8Format"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RowBalancedSparseQ8:
+    """Quantized packed row-balanced sparse matrix, logical (rows, ncols).
+
+    values:  (rows, K)  integer value codes (int8 / int16)
+    deltas:  (rows, K)  delta-encoded column indices — identical to the
+                        float packing's (quantization never moves a column)
+    scales:  (rows,)    float32 per-row dequant scales
+    ncols:   static logical column count
+    qmax:    static largest positive code (symmetric range)
+    frac_bits: static   fixed-point fraction bits, or None for scaled
+    """
+
+    values: jnp.ndarray
+    deltas: jnp.ndarray
+    scales: jnp.ndarray
+    ncols: int = dataclasses.field(metadata=dict(static=True))
+    qmax: int = dataclasses.field(metadata=dict(static=True))
+    frac_bits: int | None = dataclasses.field(
+        default=None, metadata=dict(static=True))
+
+    @property
+    def rows(self) -> int:
+        return self.values.shape[-2]
+
+    @property
+    def K(self) -> int:
+        return self.values.shape[-1]
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.K / self.ncols
+
+    @property
+    def scheme(self) -> QuantScheme:
+        if self.frac_bits is not None:
+            m = int(self.qmax + 1).bit_length() - 1 - self.frac_bits
+            name = f"q{m}.{self.frac_bits}"
+        else:
+            name = "int8" if self.qmax == 127 else f"sym{self.qmax}"
+        return QuantScheme(name, qmax=self.qmax, frac_bits=self.frac_bits)
+
+    def col_indices(self) -> jnp.ndarray:
+        """Absolute column indices (rows, K), int32."""
+        return jnp.cumsum(self.deltas.astype(jnp.int32), axis=-1)
+
+    def memory_bytes(self) -> dict:
+        """Storage accounting (values + indices + per-row scales) vs the
+        dense float32 equivalent."""
+        v = self.values.size * self.values.dtype.itemsize
+        i = self.deltas.size * self.deltas.dtype.itemsize
+        sc = self.scales.size * 4
+        dense = int(np.prod(self.values.shape[:-1])) * self.ncols * 4
+        return dict(values=v, indices=i, scales=sc, total=v + i + sc,
+                    dense_equiv=dense, ratio=(v + i + sc) / dense)
+
+
+def quantize_packed(s: P.RowBalancedSparse, scheme) -> RowBalancedSparseQ8:
+    """Quantize a float packed matrix to codes + per-row scales.
+
+    The deltas pass through untouched — sparsity pattern and value
+    precision are orthogonal axes. Works on stacked (L, rows, K) packings
+    too (scales come out (L, rows))."""
+    scheme = parse_scheme(scheme)
+    scales = row_scales(s.values, scheme)
+    q = quantize(s.values, scales[..., None], scheme)
+    _check_accumulator(q, scheme)
+    return RowBalancedSparseQ8(values=q, deltas=s.deltas, scales=scales,
+                               ncols=s.ncols, qmax=scheme.qmax,
+                               frac_bits=scheme.frac_bits)
+
+
+def _check_accumulator(codes, scheme: QuantScheme) -> None:
+    """Warn when a row's worst-case integer dot can wrap int32.
+
+    The kernels accumulate code products in int32 (the documented
+    contract). Per row the accumulation is bounded by
+    ``Σ_k |w_code| · qmax`` (activation codes are clipped to ±qmax); int8
+    schemes can never reach 2^31, but a wide-K matrix under a high-qmax
+    ``qM.N`` scheme can — and since the reference twins accumulate in
+    int32 too, parity tests would NOT catch the wraparound. Skipped for
+    traced values (packing happens eagerly in practice)."""
+    if isinstance(codes, jax.core.Tracer):
+        return
+    worst = int(np.abs(np.asarray(codes, np.int64)).sum(axis=-1).max())
+    worst *= scheme.qmax
+    if worst >= 2 ** 31:
+        warnings.warn(
+            f"quantize_packed: scheme {scheme.name!r} can overflow the "
+            f"int32 kernel accumulator (worst-case per-row dot "
+            f"{worst:.3g} >= 2^31); use fewer bits (e.g. 'q1.11') or "
+            "higher sparsity (smaller K)", stacklevel=3)
+
+
+def dequantize_packed(q: RowBalancedSparseQ8) -> P.RowBalancedSparse:
+    """Reconstruct the float packing (codes · per-row scales)."""
+    vals = q.values.astype(jnp.float32) * q.scales[..., None]
+    return P.RowBalancedSparse(values=vals, deltas=q.deltas, ncols=q.ncols)
+
+
+def abstract_quantize_packed(rep: P.RowBalancedSparse,
+                             scheme) -> RowBalancedSparseQ8:
+    """ShapeDtypeStruct stand-in of ``quantize_packed`` (dry-run packs)."""
+    scheme = parse_scheme(scheme)
+    return RowBalancedSparseQ8(
+        values=jax.ShapeDtypeStruct(rep.values.shape, scheme.storage),
+        deltas=rep.deltas,
+        scales=jax.ShapeDtypeStruct(rep.values.shape[:-1], jnp.float32),
+        ncols=rep.ncols, qmax=scheme.qmax, frac_bits=scheme.frac_bits)
+
+
+def packed_bytes_q(rows: int, ncols: int, ratio: float, scheme) -> int:
+    """Analytic packed storage of one quantized row-balanced matrix:
+    codes + delta indices + one f32 scale per row."""
+    scheme = parse_scheme(scheme)
+    k = S.keep_count(ncols, ratio)
+    dd = P._delta_dtype(ncols, k)
+    return rows * k * (scheme.storage.itemsize + dd.itemsize) + rows * 4
+
+
+class RowBalancedQ8Format(SparseFormat):
+    """Registered quantized row-balanced format (``row_balanced_q8``).
+
+    Same mask as ``row_balanced`` (the pattern is identical); ``pack``
+    additionally quantizes (rule options pick the scheme, default int8);
+    matvec dispatches the q8 kernels with a dynamic max-abs activation
+    scale (calibrated static scales come in through the model/serving
+    path, not the generic format surface)."""
+
+    name = "row_balanced_q8"
+
+    def __init__(self, default_scheme: str = "int8"):
+        self.default_scheme = default_scheme
+
+    def mask(self, w, ratio, **opts):
+        return S.row_balanced_mask(w, ratio)
+
+    def pack(self, w, mask, scheme: str | None = None, **opts):
+        return quantize_packed(P.pack(w, mask),
+                               scheme or self.default_scheme)
+
+    def unpack(self, packed):
+        return P.unpack(dequantize_packed(packed))
+
+    def abstract_pack(self, rows, ncols, ratio, dtype,
+                      scheme: str | None = None, **opts):
+        k = S.keep_count(ncols, ratio)
+        dd = P._delta_dtype(ncols, k)
+        rep = P.RowBalancedSparse(
+            values=jax.ShapeDtypeStruct((rows, k), jnp.float32),
+            deltas=jax.ShapeDtypeStruct((rows, k), jnp.dtype(dd)),
+            ncols=ncols)
+        return abstract_quantize_packed(rep, scheme or self.default_scheme)
+
+    def matvec(self, packed, x, *, backend=None):
+        from ..kernels import ops as K
+        return K.rb_spmv_q8(packed, x, backend=backend).astype(x.dtype)
+
+    def dual_matvec(self, pa, x, pb, h, bias=None, *, backend=None):
+        from ..kernels import ops as K
+        if bias is None:
+            bias = jnp.zeros((pa.rows,), jnp.float32)
+        return K.rb_dual_spmv_q8(pa, x, pb, h, bias,
+                                 backend=backend).astype(x.dtype)
+
+    def packed_bytes(self, rows, ncols, ratio, dtype,
+                     scheme: str | None = None, **opts):
+        return packed_bytes_q(rows, ncols, ratio,
+                              scheme or self.default_scheme)
+
+    def memory_bytes(self, packed, **opts):
+        return packed.memory_bytes()
+
+
+register(RowBalancedQ8Format())

@@ -1,0 +1,141 @@
+"""Quantization arithmetic: schemes, (de)quantization, per-row scales.
+
+The BRDS accelerator evaluates its pruned LSTMs in fixed-point arithmetic
+(the paper's Table-1 storage is "fixed-16"), and the baselines it beats
+treat bit width as a first-class axis next to sparsity: ESE stores 12-bit
+sparse LSTM weights, Spartus serves fixed-point spatio-temporal sparse
+LSTMs. This module is the arithmetic core of that axis:
+
+  QuantScheme   the number format — symmetric ``int8`` (per-row max-abs
+                scales, the TPU-native path) or paper-style ``qM.N``
+                fixed point (sign + M integer + N fraction bits, one
+                global scale 2^-N — values saturate, like the FPGA)
+  quantize      x → integer codes  q = clip(round(x / scale), ±qmax)
+  dequantize    codes → floats     x̂ = q · scale
+  row_scales    per-row dequant scales for a (…, rows, K) value array, so
+                the scales ride the row-balanced packed layout
+
+Everything here is pure jnp and shared by the packed formats, the Pallas
+q8 kernels' wrappers, and the reference twins — both backends see the SAME
+codes and scales, which is what makes pallas↔ref parity exact (integer
+accumulation has no rounding to disagree about).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax.numpy as jnp
+
+__all__ = ["QuantScheme", "parse_scheme", "quantize", "dequantize",
+           "row_scales"]
+
+_QMN = re.compile(r"^q(\d+)\.(\d+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantScheme:
+    """One number format for quantized inference.
+
+    Parameters
+    ----------
+    name : str
+        Registry-style name (``"int8"`` or ``"qM.N"``).
+    qmax : int
+        Largest positive integer code; codes live in [-qmax, qmax]
+        (symmetric — the asymmetric extra negative code is never used).
+    frac_bits : int or None
+        ``None`` for scaled schemes (per-row max-abs scales, int8 style);
+        ``N`` for qM.N fixed point, where every scale is the constant
+        2^-N and out-of-range values saturate.
+
+    Examples
+    --------
+    >>> parse_scheme("int8").qmax
+    127
+    >>> s = parse_scheme("q1.11")
+    >>> (s.qmax, s.frac_bits, str(s.storage))
+    (4095, 11, 'int16')
+    >>> parse_scheme("q1.11").fixed_scale
+    0.00048828125
+    """
+
+    name: str
+    qmax: int
+    frac_bits: int | None = None
+
+    @property
+    def storage(self):
+        """Narrowest jnp integer dtype holding the codes."""
+        return jnp.dtype(jnp.int8) if self.qmax <= 127 else \
+            jnp.dtype(jnp.int16)
+
+    @property
+    def fixed_scale(self) -> float | None:
+        """The constant scale 2^-N of a fixed-point scheme (None if
+        scaled)."""
+        return None if self.frac_bits is None else 2.0 ** -self.frac_bits
+
+    @property
+    def bits(self) -> int:
+        """Code width in bits (sign included)."""
+        return 1 + int(self.qmax).bit_length()
+
+    def act_scale(self, scale):
+        """Resolve an activation scale: fixed-point schemes always use
+        2^-N; scaled schemes use the given ``scale`` (None → caller
+        derives one, e.g. dynamic max-abs)."""
+        return self.fixed_scale if self.frac_bits is not None else scale
+
+
+def parse_scheme(spec) -> QuantScheme:
+    """``"int8"`` | ``"qM.N"`` | QuantScheme → QuantScheme.
+
+    ``qM.N`` is sign + M integer + N fraction bits (1+M+N total, ≤ 16):
+    codes in [-(2^(M+N)-1), 2^(M+N)-1], value = code · 2^-N. The paper's
+    12-bit fixed point is ``q0.11``; ``q1.11`` adds one integer bit of
+    headroom for the gate preactivation range.
+    """
+    if isinstance(spec, QuantScheme):
+        return spec
+    if spec == "int8":
+        return QuantScheme("int8", qmax=127, frac_bits=None)
+    m = _QMN.match(str(spec))
+    if not m:
+        raise ValueError(f"unknown quant scheme {spec!r}; expected 'int8' "
+                         "or 'qM.N' (e.g. 'q1.11')")
+    mi, n = int(m.group(1)), int(m.group(2))
+    if n < 1 or mi + n > 15:
+        raise ValueError(f"qM.N needs 1 <= N and M+N <= 15, got q{mi}.{n}")
+    return QuantScheme(f"q{mi}.{n}", qmax=2 ** (mi + n) - 1, frac_bits=n)
+
+
+def quantize(x, scale, scheme: QuantScheme):
+    """x → integer codes: ``clip(round(x / scale), -qmax, qmax)``.
+
+    ``scale`` broadcasts against ``x`` (scalar activation scale or
+    per-row ``scales[..., None]``). Returns ``scheme.storage`` codes.
+    """
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, -scheme.qmax, scheme.qmax).astype(scheme.storage)
+
+
+def dequantize(q, scale):
+    """Integer codes → float32 values (``q · scale``)."""
+    return q.astype(jnp.float32) * scale
+
+
+def row_scales(values, scheme: QuantScheme):
+    """Per-row dequant scales for a (…, rows, K) value array.
+
+    Scaled schemes (int8): max-abs over the row's K packed values / qmax,
+    so the row's largest weight maps exactly onto qmax (no clipping and
+    a ≤ scale/2 round-off bound). All-zero rows get scale 1.0. Fixed-point
+    schemes: the constant 2^-N (values saturate at ±qmax·2^-N).
+    Returns float32 of shape ``values.shape[:-1]``.
+    """
+    shape = values.shape[:-1]
+    if scheme.frac_bits is not None:
+        return jnp.full(shape, scheme.fixed_scale, jnp.float32)
+    amax = jnp.max(jnp.abs(values.astype(jnp.float32)), axis=-1)
+    return jnp.where(amax > 0, amax / scheme.qmax, 1.0)

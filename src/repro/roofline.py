@@ -241,8 +241,48 @@ def collective_stats(comps, mult, n_devices: int) -> dict:
 _DOT_OPERANDS = re.compile(r"dot\(([^)]*)\)")
 _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
+# Quantized dots must not be costed at the bf16 peak. Two signals mark a
+# dot as integer arithmetic: narrow-int operands (pre-optimization HLO /
+# TPU builds keep s8 operands into the MXU) or an integer OUTPUT dtype —
+# XLA's CPU backend normalizes s8-operand dots to convert→s32-dot, which
+# erases the operand signal but keeps the s32 accumulator type; float
+# models never emit integer-output dots, so the union is a sound
+# classifier either way.
+_INT8_DTYPES = {"s8", "u8", "s4", "u4"}
+_INT_DOT_OUT = {"s8", "u8", "s16", "u16", "s32", "u32"}
 
-def dot_flops(comps, mult) -> float:
+
+def _lhs_shape_str(line, comp) -> str:
+    """The lhs operand's shape string of a dot line ('' if unknown)."""
+    ops = _DOT_OPERANDS.search(line)
+    if not ops:
+        return ""
+    # Operands separate on ", " — shape dim commas ("f32[8,16]")
+    # have no space, so a plain str.split(",") truncates the lhs
+    # shape and drops contraction dims.
+    lhs = ops.group(1).split(", ")[0].strip()
+    # Post-opt HLO writes operands as "<shape> %name"; read the
+    # inline shape, falling back to the defining op for bare
+    # "%name" operands.
+    if _SHAPE_RE.search(lhs):
+        return lhs
+    lhs_name = lhs.split()[-1].lstrip("%")
+    return comp.shapes.get(lhs_name, "")
+
+
+def _is_int_dot(line, out_shape: str, comp) -> bool:
+    """Integer-arithmetic (quantized) dot: narrow-int lhs operand or an
+    integer output/accumulator dtype."""
+    sm = _SHAPE_RE.search(out_shape)
+    if sm and sm.group(1) in _INT_DOT_OUT:
+        return True
+    lm = _SHAPE_RE.search(_lhs_shape_str(line, comp))
+    return bool(lm and lm.group(1) in _INT8_DTYPES)
+
+
+def dot_flops(comps, mult, int_only: bool = False) -> float:
+    """Loop-aware dot FLOPs. ``int_only`` restricts to integer-arithmetic
+    (quantized) dots — see ``_is_int_dot``; False counts every dot."""
     total = 0.0
     for name, comp in comps.items():
         m = mult.get(name, 0.0)
@@ -252,29 +292,28 @@ def dot_flops(comps, mult) -> float:
             mo = _OP_DEF.match(line)
             if not mo or mo.group(3) != "dot":
                 continue
+            if int_only and not _is_int_dot(line, mo.group(2), comp):
+                continue
+            lhs = _lhs_shape_str(line, comp)
             out_elems = shape_elems(mo.group(2))
-            ops = _DOT_OPERANDS.search(line)
             cm = _CONTRACT.search(line)
             contract = 1
-            if ops and cm and cm.group(1):
-                # Operands separate on ", " — shape dim commas ("f32[8,16]")
-                # have no space, so a plain str.split(",") truncates the lhs
-                # shape and drops contraction dims.
-                lhs = ops.group(1).split(", ")[0].strip()
-                # Post-opt HLO writes operands as "<shape> %name"; read the
-                # inline shape, falling back to the defining op for bare
-                # "%name" operands.
+            if cm and cm.group(1):
                 dims = _shape_dims(lhs)
-                if not dims:
-                    lhs_name = lhs.split()[-1].lstrip("%")
-                    lhs_shape = comp.shapes.get(lhs_name)
-                    dims = _shape_dims(lhs_shape) if lhs_shape else []
                 for idx in cm.group(1).split(","):
                     i = int(idx)
                     if i < len(dims):
                         contract *= dims[i]
             total += m * 2.0 * out_elems * contract
     return total
+
+
+def int8_dot_flops(comps, mult) -> float:
+    """The integer-dot subset of ``dot_flops``, costed at
+    ``hw.PEAK_INT8_OPS`` by the roofline terms. (int16 fixed-point dots
+    are approximated at the same rate — the quantized path's dominant
+    deployment is int8.)"""
+    return dot_flops(comps, mult, int_only=True)
 
 
 # ------------------------------------------------------------- top level
@@ -286,11 +325,16 @@ class RooflineReport:
     collectives: dict           # per-kind payload/wire bytes
     collective_wire_bytes: float
     n_devices: int
+    flops_int8: float = 0.0     # int8-operand subset of flops_hlo
 
     def terms(self, hbm_bytes_per_chip: float, chips: int) -> dict:
         # post-SPMD HLO shapes are PER-DEVICE, so parsed flops / wire bytes
-        # are already per-chip quantities.
-        compute_s = self.flops_hlo / hw.PEAK_BF16_FLOPS
+        # are already per-chip quantities. int8 dots run at the int8 MXU
+        # peak (2x bf16) — costing a quantized model at the bf16 rate would
+        # overstate its compute time.
+        compute_s = ((self.flops_hlo - self.flops_int8)
+                     / hw.PEAK_BF16_FLOPS
+                     + self.flops_int8 / hw.PEAK_INT8_OPS)
         memory_s = hbm_bytes_per_chip / hw.HBM_BW
         coll_s = self.collective_wire_bytes / hw.ICI_BW
         dom = max(compute_s, memory_s, coll_s)
@@ -322,6 +366,7 @@ def analyze_hlo(text: str, n_devices: int,
         collectives=colls,
         collective_wire_bytes=wire,
         n_devices=n_devices,
+        flops_int8=int8_dot_flops(comps, mult),
     )
 
 

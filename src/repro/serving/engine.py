@@ -66,7 +66,7 @@ class ServeEngine:
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("max_len",))
 
-    def prepare(self, params, pack: bool | None = None):
+    def prepare(self, params, pack: bool | None = None, calib=None):
         """Apply the engine's sparsity policy/plan to params. Prunes to the
         policy's patterns; when the model decodes through packed kernels
         (``pack=None`` → ``model.supports_packed_decode``), the pruned
@@ -75,6 +75,12 @@ class ServeEngine:
         (``DeltaGateConfig``) is wired into the model here: the engine
         swaps in ``model.with_delta(...)`` so the decode cache grows the
         temporal reference state and every step skips unfired columns.
+        A policy ``quant`` rule (``QuantConfig``) likewise rewires the
+        model: activation scales are calibrated over ``calib`` (a token /
+        feature batch run through the DENSE params — ``repro.quant.
+        calibrate_lstm``; scale-free fallback when None), the model swaps
+        to ``with_quant(plan)``, and packing emits RowBalancedSparseQ8 so
+        decode runs the int32-accumulate q8 kernels.
         Returns (params, report) — report is None when the engine is
         dense."""
         if self.sparsity is None:
@@ -82,6 +88,8 @@ class ServeEngine:
         plan = (self.sparsity.compile(params)
                 if hasattr(self.sparsity, "compile") else self.sparsity)
         act = getattr(plan, "activation", None)
+        qcfg = getattr(plan, "quant", None)
+        rewired = False
         if act is not None:
             if not hasattr(self.model, "with_delta"):
                 raise ValueError(
@@ -89,6 +97,21 @@ class ServeEngine:
                     f"but {type(self.model).__name__} has no temporal-"
                     "delta serving path (with_delta)")
             self.model = self.model.with_delta(act)
+            rewired = True
+        if qcfg is not None:
+            if not hasattr(self.model, "with_quant"):
+                raise ValueError(
+                    f"sparsity policy carries a quant rule ({qcfg}) but "
+                    f"{type(self.model).__name__} has no quantized "
+                    "serving path (with_quant)")
+            from ..quant import calibrate_lstm, default_plan
+            if calib is not None:
+                qplan = calibrate_lstm(self.model, params, calib, qcfg)
+            else:
+                qplan = default_plan(qcfg, len(params["layers"]))
+            self.model = self.model.with_quant(qplan)
+            rewired = True
+        if rewired:
             self._prefill = jax.jit(self.model.prefill,
                                     static_argnames=("max_len",))
             self._loops.clear()

@@ -4,7 +4,8 @@ A ``SamplingConfig`` is a static (hashable) description of how to turn the
 last-position logits into the next token — it closes over no arrays, so it
 can key a jit cache and live inside a ``lax.scan`` body. ``sample`` itself
 is pure jnp: greedy argmax at temperature 0, otherwise temperature-scaled
-categorical, optionally restricted to the top-k logits.
+categorical, optionally restricted to the top-k logits and/or the top-p
+(nucleus) probability mass.
 """
 from __future__ import annotations
 
@@ -24,6 +25,10 @@ class SamplingConfig:
 
     temperature: 0 → greedy argmax; >0 → categorical over logits/T.
     top_k:       >0 → restrict sampling to the k largest logits.
+    top_p:       in (0, 1) → nucleus sampling: restrict to the smallest
+                 set of tokens whose probability mass (after temperature
+                 and top-k) reaches p; 0 or ≥1 disables. The most likely
+                 token is always kept. Composes with top_k (k first).
     eos_id:      ≥0 → sequences stop after emitting this id (the EOS token
                  itself is emitted; later steps emit ``pad_id``).
     pad_id:      filler id emitted by finished sequences.
@@ -31,8 +36,13 @@ class SamplingConfig:
 
     temperature: float = 0.0
     top_k: int = 0
+    top_p: float = 0.0
     eos_id: int = -1
     pad_id: int = 0
+
+    def __post_init__(self):
+        if self.top_p < 0.0:
+            raise ValueError(f"top_p must be >= 0, got {self.top_p}")
 
     @property
     def stops(self) -> bool:
@@ -41,7 +51,7 @@ class SamplingConfig:
 
 def sample(rng, logits, cfg: SamplingConfig):
     """logits (B, V) → next-token ids (B,) int32. ``cfg`` is static, so the
-    greedy/top-k branches resolve at trace time."""
+    greedy/top-k/top-p branches resolve at trace time."""
     logits = logits.astype(jnp.float32)
     if cfg.temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -49,4 +59,16 @@ def sample(rng, logits, cfg: SamplingConfig):
     if cfg.top_k > 0:
         kth = jax.lax.top_k(scaled, cfg.top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, _NEG, scaled)
+    if 0.0 < cfg.top_p < 1.0:
+        # nucleus: drop tokens outside the smallest prefix (by descending
+        # probability) whose cumulative mass reaches p. A token survives
+        # iff the mass strictly BEFORE it is < p, so the argmax always
+        # survives and ties at the boundary resolve inclusively.
+        sort = jnp.sort(scaled, axis=-1)[..., ::-1]            # descending
+        probs = jax.nn.softmax(sort, axis=-1)
+        before = jnp.cumsum(probs, axis=-1) - probs
+        keep = before < cfg.top_p                              # (B, V) sorted
+        # smallest surviving logit per row = the cutoff threshold
+        cut = jnp.min(jnp.where(keep, sort, jnp.inf), axis=-1, keepdims=True)
+        scaled = jnp.where(scaled < cut, _NEG, scaled)
     return jax.random.categorical(rng, scaled).astype(jnp.int32)

@@ -32,6 +32,13 @@ from .search import BRDSResult, brds_search, plane_search, \
 from .temporal import (DeltaGateConfig, cap_count, delta_threshold,
                        occupancy_report)
 
+# Importing repro.quant.formats registers the "row_balanced_q8" format
+# (quant depends on this package's registry, so it cannot register itself
+# first). Policies reference quantization via the `quant=` rule or the
+# registered format name — either path needs the side effect here.
+from ..quant import formats as _quant_formats  # noqa: E402,F401
+from ..quant import QuantConfig  # noqa: E402  (re-export: the policy rule)
+
 __all__ = [
     "BACKENDS", "get_default_backend", "set_default_backend", "use_backend",
     "SparseFormat", "MaskedDense", "register", "get_format",
@@ -40,4 +47,5 @@ __all__ = [
     "transformer_policy", "apply_masks", "mask_grads", "sparsity_report",
     "BRDSResult", "brds_search", "plane_search", "execution_time_model",
     "DeltaGateConfig", "cap_count", "delta_threshold", "occupancy_report",
+    "QuantConfig",
 ]

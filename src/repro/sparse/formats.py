@@ -104,10 +104,12 @@ class SparseFormat:
         raise NotImplementedError
 
     # -- packed representation -----------------------------------------
-    def pack(self, w: jnp.ndarray, mask: jnp.ndarray) -> Any:
+    def pack(self, w: jnp.ndarray, mask: jnp.ndarray, **opts) -> Any:
         """Packed representation of ``w`` under ``mask``.
 
-        Returns a pytree (jit/pjit/scan-safe). The base implementation is
+        ``**opts`` are the rule's pattern options (quantized formats read
+        their scheme here; mask-only options are ignored). Returns a
+        pytree (jit/pjit/scan-safe). The base implementation is
         :class:`MaskedDense` — formats with dedicated kernels override.
         """
         return MaskedDense(values=S.apply_mask(w, mask), mask=mask)
@@ -244,7 +246,7 @@ class RowBalancedFormat(SparseFormat):
     def mask(self, w, ratio, **opts):
         return S.row_balanced_mask(w, ratio)
 
-    def pack(self, w, mask):
+    def pack(self, w, mask, **opts):
         return P.pack(w, mask)
 
     def unpack(self, packed):

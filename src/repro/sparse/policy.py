@@ -142,6 +142,10 @@ class SparsityPolicy:
     activation : DeltaGateConfig, optional
         Temporal-delta activation rule; None (default) means dense
         activations.
+    quant : QuantConfig, optional
+        Fixed-point inference rule (``repro.quant``): row-balanced sites
+        pack to quantized codes + per-row scales and serving runs the q8
+        kernels; None (default) keeps float packed values.
 
     Examples
     --------
@@ -157,6 +161,7 @@ class SparsityPolicy:
     rules: tuple
     backend: str = "auto"
     activation: Any = None
+    quant: Any = None
 
     def __post_init__(self):
         if self.backend not in B.BACKENDS:
@@ -165,7 +170,8 @@ class SparsityPolicy:
 
     @classmethod
     def of(cls, mapping: Mapping[str, Any], *, backend: str = "auto",
-           layout: str = "in_out", activation: Any = None) -> "SparsityPolicy":
+           layout: str = "in_out", activation: Any = None,
+           quant: Any = None) -> "SparsityPolicy":
         """Build a policy from a ``{pattern: spec}`` mapping.
 
         Parameters
@@ -179,6 +185,8 @@ class SparsityPolicy:
             Weight layout shared by every rule built here.
         activation : DeltaGateConfig, optional
             Temporal-delta activation rule.
+        quant : QuantConfig, optional
+            Fixed-point inference rule (quantized packing + q8 kernels).
 
         Returns
         -------
@@ -194,7 +202,7 @@ class SparsityPolicy:
                 rules.append(Rule(pat, fmt, float(ratio), layout,
                                   dict(opts)))
         return cls(rules=tuple(rules), backend=backend,
-                   activation=activation)
+                   activation=activation, quant=quant)
 
     def with_backend(self, backend: str) -> "SparsityPolicy":
         """Copy of this policy with a different kernel backend."""
@@ -204,6 +212,11 @@ class SparsityPolicy:
         """Copy of this policy with a temporal-delta activation rule
         (a ``DeltaGateConfig``, or None to disable)."""
         return dataclasses.replace(self, activation=activation)
+
+    def with_quant(self, quant) -> "SparsityPolicy":
+        """Copy of this policy with a fixed-point inference rule
+        (a ``repro.quant.QuantConfig``, or None to disable)."""
+        return dataclasses.replace(self, quant=quant)
 
     def match(self, path_str: str) -> Rule | None:
         """First rule whose pattern ``re.search``-matches ``path_str``."""
@@ -237,7 +250,8 @@ class SparsityPolicy:
 
 # ------------------------------------------------------------------ plan
 
-_BATCHED_MASK_FORMATS = {"row_balanced"}  # mask() accepts leading batch dims
+# formats whose mask() accepts leading batch dims
+_BATCHED_MASK_FORMATS = {"row_balanced", "row_balanced_q8"}
 
 
 class SparsityPlan:
@@ -271,6 +285,12 @@ class SparsityPlan:
         """The policy's temporal-delta activation rule
         (``DeltaGateConfig`` or None)."""
         return self.policy.activation
+
+    @property
+    def quant(self):
+        """The policy's fixed-point inference rule
+        (``repro.quant.QuantConfig`` or None)."""
+        return self.policy.quant
 
     def __repr__(self):
         return (f"SparsityPlan(backend={self.backend!r}, "
@@ -317,7 +337,15 @@ class SparsityPlan:
         raw weights and already-pruned ones — magnitude top-k re-selects
         the survivors). Pass the masks from ``prune`` to pack an exact
         pattern. abstract=True builds ShapeDtypeStruct stand-ins (dry-run).
-        Returns (packed_params, report)."""
+        A policy ``quant`` rule quantizes every row-balanced site on the
+        way out (integer codes + per-row scales; the byte accounting
+        reflects the narrowed values). Returns (packed_params, report)."""
+        qscheme = None
+        if self.quant is not None:
+            from ..quant import (abstract_quantize_packed, packed_bytes_q,
+                                 parse_scheme, quantize_packed)
+            from ..core.packing import RowBalancedSparse
+            qscheme = parse_scheme(getattr(self.quant, "scheme", self.quant))
         flat, treedef = jax.tree_util.tree_flatten_with_path(params)
         out_leaves = []
         dense_bytes = packed_bytes = 0
@@ -334,11 +362,17 @@ class SparsityPlan:
             L1 = site.L or 1
             r, opts = site.rule.ratio, site.rule.options
             dense_bytes += leaf.size * leaf.dtype.itemsize
-            packed_bytes += L1 * site.fmt.packed_bytes(
-                site.d_out, site.d_in, r, leaf.dtype, **opts)
+            if qscheme is not None and site.fmt.name == "row_balanced":
+                packed_bytes += L1 * packed_bytes_q(site.d_out, site.d_in,
+                                                    r, qscheme)
+            else:
+                packed_bytes += L1 * site.fmt.packed_bytes(
+                    site.d_out, site.d_in, r, leaf.dtype, **opts)
             if abstract:
                 rep = site.fmt.abstract_pack(site.d_out, site.d_in, r,
                                              leaf.dtype, **opts)
+                if qscheme is not None and isinstance(rep, RowBalancedSparse):
+                    rep = abstract_quantize_packed(rep, qscheme)
                 if site.L:
                     rep = site.fmt.abstract_stack(rep, site.L)
             else:
@@ -347,8 +381,11 @@ class SparsityPlan:
                     m_oi = site.to_oi(masks[ps])
                 else:
                     m_oi = site.to_oi(self._site_mask(site, leaf))
-                packs = [site.fmt.pack(w_oi[i], m_oi[i]) for i in range(L1)]
+                packs = [site.fmt.pack(w_oi[i], m_oi[i], **opts)
+                         for i in range(L1)]
                 rep = site.fmt.stack(packs) if site.L else packs[0]
+                if qscheme is not None and isinstance(rep, RowBalancedSparse):
+                    rep = quantize_packed(rep, qscheme)
             out_leaves.append(rep)
         packed = jax.tree_util.tree_unflatten(treedef, out_leaves)
         return packed, dict(dense_bytes=dense_bytes,
@@ -403,7 +440,8 @@ def sparsity_report(masks: dict) -> dict:
 # --------------------------------------------------------- stock policies
 
 def lstm_policy(spar_x: float, spar_h: float, *, backend: str = "auto",
-                fmt: str = "row_balanced", delta=None) -> SparsityPolicy:
+                fmt: str = "row_balanced", delta=None,
+                quant=None) -> SparsityPolicy:
     """The paper's dual-ratio split: input weights W_x at ``spar_x``,
     recurrent weights W_h at ``spar_h`` (both row-balanced by default).
 
@@ -419,10 +457,14 @@ def lstm_policy(spar_x: float, spar_h: float, *, backend: str = "auto",
         Temporal-delta activation rule (Spartus-style skipping) to carry
         alongside the weight rules — serving wires it into the LSTM's
         decode cache (see ``repro.sparse.temporal``).
+    quant : QuantConfig, optional
+        Fixed-point inference rule (``repro.quant``): pack emits
+        quantized codes + per-row scales and decode runs the q8 kernels
+        — composes multiplicatively with both weight and delta sparsity.
     """
     return SparsityPolicy.of(
         {r"w_x$": (fmt, spar_x), r"w_h$": (fmt, spar_h)},
-        backend=backend, layout="out_in", activation=delta)
+        backend=backend, layout="out_in", activation=delta, quant=quant)
 
 
 # (pattern, family, layout) — family A pruned at spar_a, B at spar_b.

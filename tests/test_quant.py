@@ -1,0 +1,417 @@
+"""Fixed-point quantization (repro.quant + the q8 kernels).
+
+Covers the ISSUE-4 acceptance criteria: quantize→dequantize error within
+the scheme bound, per-row scales surviving pack/format round-trips, q8
+kernel pallas↔ref EXACT parity (integer accumulation), and quant=int8
+Θ=0 decode reproducing the quantized reference trajectory step for step.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pack_from_dense
+from repro.core.packing import RowBalancedSparse
+from repro.kernels import ops as K
+from repro.models import LSTMModel, LSTMConfig
+from repro.quant import (QuantConfig, QuantPlan, RowBalancedSparseQ8,
+                         calibrate_lstm, default_plan, dequantize,
+                         dequantize_packed, packed_bytes_q, parse_scheme,
+                         quantize, quantize_packed, row_scales)
+from repro.serving import ServeEngine
+from repro.sparse import (DeltaGateConfig, get_format, lstm_policy,
+                          use_backend)
+
+
+def _rand(rng, shape, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32), dtype)
+
+
+# ------------------------------------------------------------- schemes
+
+def test_parse_scheme():
+    s = parse_scheme("int8")
+    assert s.qmax == 127 and s.frac_bits is None and s.bits == 8
+    assert s.storage == jnp.dtype(jnp.int8)
+    q = parse_scheme("q1.11")
+    assert q.qmax == 4095 and q.frac_bits == 11
+    assert q.storage == jnp.dtype(jnp.int16)
+    assert q.fixed_scale == 2.0 ** -11
+    assert parse_scheme(q) is q
+    for bad in ("int4", "q1.0", "q9.9", "garbage"):
+        with pytest.raises(ValueError):
+            parse_scheme(bad)
+
+
+def test_quant_config_validation():
+    assert QuantConfig("int8").resolved.qmax == 127
+    with pytest.raises(ValueError):
+        QuantConfig("nope")
+    with pytest.raises(ValueError):
+        QuantConfig("int8", method="median")
+    with pytest.raises(ValueError):
+        QuantConfig("int8", method="percentile", percentile=0.0)
+
+
+# --------------------------------------------------- round-trip bounds
+
+@pytest.mark.parametrize("scheme,scale_mag", [
+    ("int8", 1.0), ("int8", 0.01), ("q1.11", 1.0), ("q4.8", 3.0),
+])
+def test_quantize_dequantize_error_within_bound(rng, scheme, scale_mag):
+    """Property: for in-range values, |deq(q(x)) − x| ≤ scale/2 (round to
+    nearest); out-of-range fixed-point values saturate to ±qmax·scale."""
+    s = parse_scheme(scheme)
+    w = _rand(rng, (64, 32)) * scale_mag
+    scales = row_scales(w, s)
+    assert scales.shape == (64,)
+    q = quantize(w, scales[:, None], s)
+    deq = dequantize(q, scales[:, None])
+    lim = np.asarray(scales)[:, None] * s.qmax
+    in_range = np.abs(np.asarray(w)) <= lim
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    bound = np.asarray(scales)[:, None] / 2 * (1 + 1e-6)
+    assert (err[in_range] <= bound.repeat(32, 1)[in_range]).all()
+    # saturated values clip to the representable edge
+    assert (np.abs(np.asarray(deq)) <= lim * (1 + 1e-6)).all()
+
+
+def test_row_scales_scaled_vs_fixed(rng):
+    w = _rand(rng, (16, 8))
+    s_int8 = row_scales(w, parse_scheme("int8"))
+    np.testing.assert_allclose(
+        np.asarray(s_int8),
+        np.abs(np.asarray(w)).max(axis=1) / 127, rtol=1e-6)
+    s_fix = row_scales(w, parse_scheme("q1.11"))
+    assert (np.asarray(s_fix) == 2.0 ** -11).all()
+    # all-zero rows get a safe scale
+    z = row_scales(jnp.zeros((4, 8)), parse_scheme("int8"))
+    assert (np.asarray(z) == 1.0).all()
+
+
+# ------------------------------------------------- packed round-trips
+
+@pytest.mark.parametrize("scheme", ["int8", "q1.11"])
+def test_quantize_packed_roundtrip(rng, scheme):
+    """Codes + per-row scales reconstruct the float packing within the
+    scheme bound; the sparsity pattern (deltas, ncols) is untouched."""
+    s = pack_from_dense(_rand(rng, (128, 64)), 0.75)
+    q = quantize_packed(s, scheme)
+    assert isinstance(q, RowBalancedSparseQ8)
+    np.testing.assert_array_equal(np.asarray(q.deltas), np.asarray(s.deltas))
+    assert q.ncols == s.ncols and q.rows == s.rows and q.K == s.K
+    np.testing.assert_array_equal(np.asarray(q.col_indices()),
+                                  np.asarray(s.col_indices()))
+    d = dequantize_packed(q)
+    assert isinstance(d, RowBalancedSparse)
+    err = np.abs(np.asarray(d.values) - np.asarray(s.values))
+    bound = np.asarray(q.scales)[:, None] / 2 * (1 + 1e-6)
+    if parse_scheme(scheme).frac_bits is None:       # no clipping by design
+        assert (err <= bound.repeat(s.K, 1)).all()
+    mem = q.memory_bytes()
+    assert mem["total"] == mem["values"] + mem["indices"] + mem["scales"]
+    assert mem["total"] < s.memory_bytes()["total"]
+
+
+def test_plan_pack_emits_q8_and_scales_survive(rng):
+    """SparsityPolicy(quant=...) packs RowBalancedSparseQ8 leaves whose
+    scales/pattern match quantizing the float pack directly."""
+    model = LSTMModel(LSTMConfig("t", input_size=24, hidden=32,
+                                 vocab_size=64))
+    params = model.init(jax.random.key(0))
+    fplan = lstm_policy(0.75, 0.5).compile(params)
+    pruned, masks = fplan.prune(params)
+    fpacked, frep = fplan.pack(pruned, masks)
+    qplan = lstm_policy(0.75, 0.5, quant=QuantConfig("int8")).compile(params)
+    qpacked, qrep = qplan.pack(pruned, masks)
+    for i in range(1):
+        for key in ("w_x", "w_h"):
+            fq = quantize_packed(fpacked["layers"][i][key], "int8")
+            got = qpacked["layers"][i][key]
+            assert isinstance(got, RowBalancedSparseQ8)
+            np.testing.assert_array_equal(np.asarray(got.values),
+                                          np.asarray(fq.values))
+            np.testing.assert_array_equal(np.asarray(got.scales),
+                                          np.asarray(fq.scales))
+            np.testing.assert_array_equal(np.asarray(got.deltas),
+                                          np.asarray(fq.deltas))
+    assert qrep["packed_bytes"] < frep["packed_bytes"]
+    # abstract (dry-run) pack mirrors the concrete shapes/dtypes
+    abs_packed, _ = qplan.pack(params, abstract=True)
+    a = abs_packed["layers"][0]["w_x"]
+    c = qpacked["layers"][0]["w_x"]
+    assert a.values.shape == c.values.shape
+    assert a.values.dtype == c.values.dtype
+    assert a.scales.shape == c.scales.shape
+
+
+def test_registered_q8_format_roundtrip(rng):
+    fmt = get_format("row_balanced_q8")
+    w = _rand(rng, (64, 32))
+    mask = fmt.mask(w, 0.5)
+    packed = fmt.pack(w, mask, scheme="q2.9")
+    assert packed.qmax == 2 ** 11 - 1 and packed.frac_bits == 9
+    dense = fmt.unpack(packed)
+    assert dense.shape == w.shape
+    # matvec agrees with the dequantized float path to quant tolerance
+    x = _rand(rng, (3, 32))
+    got = fmt.matvec(packed, x, backend="ref")
+    want = x @ np.asarray(dense).T
+    np.testing.assert_allclose(np.asarray(got), want, atol=0.1)
+    assert fmt.packed_bytes(64, 32, 0.5, jnp.float32, scheme="q2.9") \
+        == packed.memory_bytes()["total"]
+
+
+def test_packed_bytes_reduction_at_matched_sparsity():
+    """≥2x weight-bytes cut for int8 vs the f32 packing at matched
+    sparsity (the fig_quant_tradeoff acceptance bar), measured over the
+    dual-ratio family pair: values shrink 4x, indices/scales dilute it."""
+    fmt = get_format("row_balanced")
+    X, H, sx, sh = 128, 256, 0.875, 0.75
+    f32 = (fmt.packed_bytes(4 * H, X, sx, jnp.float32)
+           + fmt.packed_bytes(4 * H, H, sh, jnp.float32))
+    q8 = packed_bytes_q(4 * H, X, sx, "int8") \
+        + packed_bytes_q(4 * H, H, sh, "int8")
+    assert f32 / q8 >= 2.0
+
+
+# -------------------------------------------------- kernel parity (exact)
+
+@pytest.mark.parametrize("scheme", ["int8", "q1.11"])
+@pytest.mark.parametrize("rows,cols,spar,B", [
+    (128, 64, 0.5, 1), (256, 96, 0.75, 4), (96, 33, 0.3, 3),
+])
+def test_rb_spmv_q8_pallas_matches_ref_exactly(rng, scheme, rows, cols,
+                                               spar, B):
+    q = quantize_packed(pack_from_dense(_rand(rng, (rows, cols)), spar),
+                        scheme)
+    x = _rand(rng, (B, cols))
+    got = K.rb_spmv_q8(q, x, backend="pallas", block_rows=64)
+    want = K.rb_spmv_q8(q, x, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("scheme", ["int8", "q1.11"])
+def test_rb_dual_spmv_q8_pallas_matches_ref_exactly(rng, scheme):
+    H, X = 64, 48
+    sx = quantize_packed(pack_from_dense(_rand(rng, (4 * H, X)), 0.875),
+                         scheme)
+    sh = quantize_packed(pack_from_dense(_rand(rng, (4 * H, H)), 0.5),
+                         scheme)
+    x, h = _rand(rng, (2, X)), _rand(rng, (2, H))
+    bias = _rand(rng, (4 * H,))
+    got = K.rb_dual_spmv_q8(sx, x, sh, h, bias, backend="pallas",
+                            block_rows=64)
+    want = K.rb_dual_spmv_q8(sx, x, sh, h, bias, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("scheme", ["int8", "q1.11"])
+def test_delta_rb_dual_spmv_q8_pallas_matches_ref_exactly(rng, scheme):
+    """The quantized fused partial-sum update m' = m + dq(Sx@q(fx·dx)) +
+    dq(Sh@q(fh·dh)) is bitwise identical across backends."""
+    H, X = 64, 48
+    sx = quantize_packed(pack_from_dense(_rand(rng, (4 * H, X)), 0.875),
+                         scheme)
+    sh = quantize_packed(pack_from_dense(_rand(rng, (4 * H, H)), 0.5),
+                         scheme)
+    dx, dh = _rand(rng, (2, X)), _rand(rng, (2, H))
+    fx = jnp.asarray(rng.random((2, X)) > 0.3)
+    fh = jnp.asarray(rng.random((2, H)) > 0.3)
+    m = _rand(rng, (2, 4 * H))
+    got = K.delta_rb_dual_spmv_q8(sx, dx, fx, sh, dh, fh, m,
+                                  backend="pallas", block_rows=64)
+    want = K.delta_rb_dual_spmv_q8(sx, dx, fx, sh, dh, fh, m, backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_q8_unfired_columns_contribute_nothing(rng):
+    """Masked-then-quantized deltas carry exact 0 codes: the delta q8
+    matvec equals the plain q8 matvec over the masked delta."""
+    H, X = 32, 24
+    sx = quantize_packed(pack_from_dense(_rand(rng, (4 * H, X)), 0.5),
+                         "int8")
+    sh = quantize_packed(pack_from_dense(_rand(rng, (4 * H, H)), 0.5),
+                         "int8")
+    dx, dh = _rand(rng, (2, X)), _rand(rng, (2, H))
+    fx = jnp.asarray(rng.random((2, X)) > 0.7)
+    fh = jnp.zeros((2, H), bool)                    # nothing fired on h
+    m = jnp.zeros((2, 4 * H), jnp.float32)
+    got = K.delta_rb_dual_spmv_q8(sx, dx, fx, sh, dh, fh, m,
+                                  act_scale_x=0.01, act_scale_h=0.01,
+                                  backend="ref")
+    want = K.rb_spmv_q8(sx, jnp.where(fx, dx, 0.0), act_scale=0.01,
+                        backend="ref")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_q8_matvec_approximates_float_matvec(rng):
+    """Sanity on the semantics (not just self-consistency): the int8 path
+    tracks the float packed matvec to quantization tolerance."""
+    s = pack_from_dense(_rand(rng, (128, 64)), 0.75)
+    q = quantize_packed(s, "int8")
+    x = _rand(rng, (3, 64))
+    got = np.asarray(K.rb_spmv_q8(q, x, backend="ref"))
+    want = np.asarray(K.rb_spmv(s, x, backend="ref"))
+    denom = np.abs(want).mean()
+    assert np.abs(got - want).mean() / denom < 0.02
+
+
+# ------------------------------------------------------- calibration
+
+def _lm(num_layers=1, hidden=64, input_size=48, vocab=128):
+    cfg = LSTMConfig("t", input_size=input_size, hidden=hidden,
+                     num_layers=num_layers, vocab_size=vocab)
+    model = LSTMModel(cfg)
+    return cfg, model, model.init(jax.random.key(0))
+
+
+def test_calibrate_lstm_scales():
+    cfg, model, params = _lm(num_layers=2)
+    tokens = jax.random.randint(jax.random.key(1), (4, 12), 0,
+                                cfg.vocab_size)
+    plan = calibrate_lstm(model, params, tokens, QuantConfig("int8"))
+    assert plan.num_layers == 2
+    for s_x, s_h in plan.act_scales:
+        assert s_x > 0 and s_h > 0
+    pplan = calibrate_lstm(model, params, tokens,
+                           QuantConfig("int8", method="percentile",
+                                       percentile=90.0))
+    # percentile clips outliers → never larger than the max-abs scale
+    for (ax, ah), (px, ph) in zip(plan.act_scales, pplan.act_scales):
+        assert px <= ax * (1 + 1e-6) and ph <= ah * (1 + 1e-6)
+    fplan = calibrate_lstm(model, params, tokens, QuantConfig("q1.11"))
+    assert all(s == (2.0 ** -11, 2.0 ** -11) for s in fplan.act_scales)
+    d = default_plan(QuantConfig("int8"), 3)
+    assert d.num_layers == 3 and d.scale_for(0) == (1.0 / 127, 1.0 / 127)
+
+
+# -------------------------------------------------- serving trajectory
+
+def test_engine_prepare_wires_quant_model():
+    cfg, model, params = _lm()
+    eng = ServeEngine(model, cfg, max_len=16, batch=2,
+                      sparsity=lstm_policy(0.5, 0.5,
+                                           quant=QuantConfig("int8")))
+    calib = jax.random.randint(jax.random.key(2), (2, 8), 0, cfg.vocab_size)
+    packed, report = eng.prepare(params, calib=calib)
+    assert eng.model is not model
+    assert isinstance(eng.model.quant, QuantPlan)
+    assert isinstance(packed["layers"][0]["w_x"], RowBalancedSparseQ8)
+    assert report["packed_bytes"] < report["dense_bytes"]
+
+
+def test_quant_theta0_decode_matches_quantized_reference_exactly():
+    """quant=int8 + Θ=0 delta: the Pallas q8 decode reproduces the
+    pure-jnp quantized reference trajectory step for step (and the
+    non-delta q8 path agrees across backends too)."""
+    cfg, model, params = _lm(num_layers=2)
+    B, P, G = 2, 8, 16
+    prompt = jax.random.randint(jax.random.key(3), (B, P), 0,
+                                cfg.vocab_size)
+    for delta in (None, DeltaGateConfig()):
+        outs = {}
+        for backend in ("pallas", "ref"):
+            with use_backend(backend):
+                eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                                  sparsity=lstm_policy(
+                                      0.875, 0.75, delta=delta,
+                                      quant=QuantConfig("int8")))
+                packed, _ = eng.prepare(params, calib=prompt)
+                outs[backend] = np.asarray(
+                    eng.generate(packed, prompt, G))
+        np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+
+
+def test_quant_decode_tracks_f32_trajectory():
+    """Calibrated int8 decode stays close to the f32 packed decode: the
+    prefill logits agree to quant tolerance (greedy tokens may diverge
+    late, so the assertion is on logits, not ids)."""
+    cfg, model, params = _lm()
+    B, P = 2, 10
+    prompt = jax.random.randint(jax.random.key(4), (B, P), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        feng = ServeEngine(model, cfg, max_len=P + 4, batch=B,
+                           sparsity=lstm_policy(0.75, 0.5))
+        fpacked, _ = feng.prepare(params)
+        flog, _ = feng._prefill(fpacked, prompt, max_len=P + 4)
+        qeng = ServeEngine(model, cfg, max_len=P + 4, batch=B,
+                           sparsity=lstm_policy(0.75, 0.5,
+                                                quant=QuantConfig("int8")))
+        qpacked, _ = qeng.prepare(params, calib=prompt)
+        qlog, _ = qeng._prefill(qpacked, prompt, max_len=P + 4)
+    mae = float(jnp.mean(jnp.abs(qlog - flog)))
+    ref = float(jnp.mean(jnp.abs(flog)))
+    assert mae / ref < 0.05
+
+
+def test_model_pack_quant_and_sparse_step(rng):
+    """LSTMModel.pack(quant=...) emits Q8 entries and sparse_step runs
+    them (identical across backends)."""
+    cfg, model, params = _lm()
+    pruned, masks = model.prune(params, 0.75, 0.5)
+    packed = model.pack(pruned, masks, quant="int8")
+    assert isinstance(packed[0]["sx"], RowBalancedSparseQ8)
+    x = _rand(rng, (2, cfg.input_size))
+    st = model.init_state(2)
+    outs = {}
+    for backend in ("pallas", "ref"):
+        h, st2 = model.sparse_step(packed, x, st, backend=backend)
+        outs[backend] = np.asarray(h)
+    np.testing.assert_array_equal(outs["pallas"], outs["ref"])
+
+
+def test_quantize_packed_warns_on_int32_accumulator_risk(rng):
+    """A wide-K, high-qmax fixed-point packing whose worst-case row dot
+    can wrap the int32 accumulator warns at quantize time (the ref twin
+    accumulates in int32 too, so parity tests can't catch wraparound)."""
+    big = jnp.full((8, 256), 15.9, jnp.float32)       # saturates q4.11
+    s = pack_from_dense(big, 0.5)
+    with pytest.warns(UserWarning, match="int32 kernel accumulator"):
+        quantize_packed(s, "q4.11")
+    # int8 can never reach 2^31 — no warning
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        quantize_packed(s, "int8")
+
+
+def test_delta_q8_doubles_calibrated_act_scales(rng, monkeypatch):
+    """The delta path quantizes DELTAS, which span twice the calibrated
+    absolute-activation range — the model must double the scaled-scheme
+    act scales before the q8 delta kernel (clipped deltas would bake
+    their error into the partial-sum memory permanently)."""
+    cfg, model, params = _lm()
+    qplan = QuantPlan(parse_scheme("int8"), ((0.01, 0.02),))
+    dm = model.with_quant(qplan).with_delta(DeltaGateConfig())
+    plan = lstm_policy(0.5, 0.5).compile(params)
+    pruned, masks = plan.prune(params)
+    packed, _ = lstm_policy(0.5, 0.5, quant=QuantConfig("int8")) \
+        .compile(params).pack(pruned, masks)
+    seen = {}
+    orig = K.brds_delta_lstm_step_q8
+
+    def spy(*a, **kw):
+        seen["ax"], seen["ah"] = kw["act_scale_x"], kw["act_scale_h"]
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(K, "brds_delta_lstm_step_q8", spy)
+    cache = dm.init_cache(2, 8)
+    tokens = jax.random.randint(jax.random.key(5), (2, 1), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        dm.decode_step(packed, cache, tokens, 0)
+    assert seen["ax"] == pytest.approx(0.02)      # 2 × 0.01
+    assert seen["ah"] == pytest.approx(0.04)      # 2 × 0.02
+
+
+def test_with_quant_preserved_by_with_delta():
+    cfg, model, _ = _lm()
+    qplan = default_plan(QuantConfig("int8"), cfg.num_layers)
+    m2 = model.with_quant(qplan).with_delta(DeltaGateConfig(theta_x=0.1))
+    assert m2.quant is qplan and m2.delta.theta_x == 0.1
+    m3 = m2.with_quant(None)
+    assert m3.quant is None and m3.delta.theta_x == 0.1

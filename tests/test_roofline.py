@@ -40,6 +40,66 @@ def test_scan_trip_count_multiplies_flops():
     assert fN == pytest.approx(N * 2 * M ** 3, rel=0.05), (fN, N * f1)
 
 
+def test_int8_dots_counted_at_int8_peak():
+    """Quantized dots — s8 operands (TPU builds) or the s32-accumulator
+    form XLA CPU normalizes them to — land in the int8 bucket and are
+    costed at hw.PEAK_INT8_OPS, not the bf16 peak; float dots stay in the
+    bf16 bucket. Keeps the quant benchmark's derived GOPS honest."""
+    from repro import hw
+
+    def program(dot_line):
+        return "\n".join([
+            "ENTRY %main (a: s8[64,128], b: s8[128,32]) -> f32[64,32] {",
+            "  %a = s8[64,128]{1,0} parameter(0)",
+            "  %b = s8[128,32]{1,0} parameter(1)",
+            "  %e = s32[64,128]{1,0} convert(%a)",
+            "  %f = s32[128,32]{1,0} convert(%b)",
+            dot_line,
+            "  %c = f32[64,128]{1,0} convert(%a)",
+            "  %d = f32[128,32]{1,0} convert(%b)",
+            "  ROOT %r = f32[64,32]{1,0} dot(f32[64,128]{1,0} %c, "
+            "f32[128,32]{1,0} %d), lhs_contracting_dims={1}, "
+            "rhs_contracting_dims={0}",
+            "}",
+        ])
+
+    one_dot = 2 * 64 * 32 * 128
+    for qdot in (
+        # pre-optimization / TPU form: s8 operands into the MXU
+        "  %q = s32[64,32]{1,0} dot(s8[64,128]{1,0} %a, s8[128,32]{1,0} "
+        "%b), lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+        # XLA-CPU normalized form: convert→s32 dot (operand signal gone,
+        # integer accumulator type remains)
+        "  %q = s32[64,32]{1,0} dot(s32[64,128]{1,0} %e, s32[128,32]{1,0} "
+        "%f), lhs_contracting_dims={1}, rhs_contracting_dims={0}",
+    ):
+        rep = roofline.analyze_hlo(program(qdot), 1)
+        assert rep.flops_hlo == pytest.approx(2 * one_dot)
+        assert rep.flops_int8 == pytest.approx(one_dot)
+        t = rep.terms(hbm_bytes_per_chip=0, chips=1)
+        expect = one_dot / hw.PEAK_BF16_FLOPS + one_dot / hw.PEAK_INT8_OPS
+        assert t["compute_s"] == pytest.approx(expect)
+
+
+def test_quantized_ref_decode_lands_in_int8_bucket():
+    """End to end: the compiled q8 reference SpMV (the formulation the
+    dry-run/roofline path analyzes) is classified as integer dot flops."""
+    import numpy as np
+    from repro.core import pack_from_dense
+    from repro.quant import quantize_packed
+    from repro.kernels import ops as K
+    rng = np.random.default_rng(0)
+    s = pack_from_dense(
+        jnp.asarray(rng.normal(size=(128, 64)).astype(np.float32)), 0.75)
+    q = quantize_packed(s, "int8")
+    x = jnp.asarray(rng.normal(size=(3, 64)).astype(np.float32))
+    hlo = jax.jit(lambda xx: K.rb_spmv_q8(q, xx, backend="ref")) \
+        .lower(x).compile().as_text()
+    rep = roofline.analyze_hlo(hlo, 1)
+    assert rep.flops_int8 > 0
+    assert rep.flops_int8 == pytest.approx(rep.flops_hlo)
+
+
 def test_known_trip_regex():
     line = ('%while.345 = (s32[]) while(%t), condition=%c, body=%b, '
             'backend_config={"known_trip_count":{"n":"24"},"other":1}')

@@ -157,6 +157,42 @@ def test_sampling_modes():
             assert int(s[b]) in allowed[b]
 
 
+def test_top_p_sampling():
+    """Nucleus sampling emits only ids inside the smallest top-p mass."""
+    rng = jax.random.key(0)
+    # row 0: one dominant token (p≈0.97) → top_p=0.5 must always pick it;
+    # row 1: near-uniform → top_p≈1 keeps everything
+    logits = jnp.stack([
+        jnp.concatenate([jnp.array([6.0]), jnp.zeros(31)]),
+        jnp.linspace(0.0, 0.1, 32),
+    ])
+    seen1 = set()
+    for i in range(25):
+        s = sample(jax.random.key(i), logits,
+                   SamplingConfig(temperature=1.0, top_p=0.5))
+        assert int(s[0]) == 0
+        seen1.add(int(s[1]))
+    assert len(seen1) > 1          # row 1's nucleus is wide at p=0.5
+    # the nucleus is the prob-sorted prefix: with top_p=0.3 on row 1,
+    # only the highest-probability ids (the tail of the linspace) survive
+    probs = np.asarray(jax.nn.softmax(logits[1]))
+    order = np.argsort(-probs)
+    keep = order[np.cumsum(probs[order]) - probs[order] < 0.3]
+    for i in range(25):
+        s = sample(jax.random.key(100 + i), logits,
+                   SamplingConfig(temperature=1.0, top_p=0.3))
+        assert int(s[1]) in set(int(k) for k in keep)
+    # top_p composes with top_k, greedy path ignores it, validation works
+    s = sample(rng, logits, SamplingConfig(temperature=1.0, top_k=2,
+                                           top_p=0.9))
+    assert s.shape == (2,)
+    np.testing.assert_array_equal(
+        np.asarray(sample(rng, logits, SamplingConfig(top_p=0.5))),
+        np.asarray(jnp.argmax(logits, -1)))
+    with pytest.raises(ValueError):
+        SamplingConfig(top_p=-0.1)
+
+
 @pytest.mark.parametrize("family", ["lstm", "transformer", "hybrid"])
 def test_continuous_batching_matches_lockstep(family, lstm, transformer,
                                               request):
