@@ -57,5 +57,32 @@ def time_fn(fn, warmup=1, iters=3):
     return ts[len(ts) // 2]
 
 
+# Machine-readable record sink: every row() lands here too, and
+# benchmarks/run.py drains it into BENCH_<module>.json after each module —
+# the perf trajectory the harness diffs across PRs.
+_RECORDS: list = []
+
+
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    rec = {"name": name, "us_per_call": round(float(us), 3)}
+    notes = []
+    for part in str(derived).split():
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                rec[k] = float(v.rstrip("x"))
+            except ValueError:
+                rec[k] = v
+        else:
+            notes.append(part)
+    if notes:
+        rec["notes"] = " ".join(notes)
+    _RECORDS.append(rec)
+
+
+def drain_records() -> list:
+    """Pop all records accumulated by row() since the last drain."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out

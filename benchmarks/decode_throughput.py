@@ -13,7 +13,15 @@ interpret mode measures Python, not hardware) across the serving matrix:
                              packed weights; the derived column reports the
                              effective-ops reduction (fired-column MACs vs.
                              always-on packed MACs)
+  packed × sharded         — repro.dist row-sharded decode over (data, model)
+                             meshes of 8 FORCED host devices (a subprocess
+                             sets --xla_force_host_platform_device_count; the
+                             numbers track Python/dispatch overhead of the
+                             sharded path, not real interconnects)
 """
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -103,6 +111,60 @@ def main():
         row("decode_packed_continuous", t / emitted * 1e6,
             f"toks_per_s={emitted / t:.0f} ragged_over_4_slots")
 
+    _sharded_rows()
+
+
+# ------------------------------------------------------------- sharded rows
+# jax locks the device count at first init, so the sharded measurements run
+# in a child process with XLA_FLAGS=--xla_force_host_platform_device_count=8
+# (same pattern as tests/test_distributed.py); the parent re-emits the
+# child's CSV rows so they land in BENCH_decode_throughput.json too.
+
+_MESHES = ((1, 8), (2, 4))
+
+
+def _sharded_child():
+    from repro.launch.mesh import make_host_mesh
+
+    cfg = bench_lstm_cfg()
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
+    with use_backend("ref"):
+        toks = B * G
+        for d, m in _MESHES:
+            eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                              sparsity=lstm_policy(0.875, 0.75),
+                              mesh=make_host_mesh(d, m))
+            packed, _ = eng.prepare(params)
+            t = _time(lambda: eng.generate(packed, prompt, G))
+            row(f"decode_packed_sharded_mesh{d}x{m}", t / toks * 1e6,
+                f"toks_per_s={toks / t:.0f} devices=8")
+
+
+def _sharded_rows():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(repo, "src")
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (src, env.get("PYTHONPATH", "")) if p)
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.decode_throughput",
+         "--sharded-child"],
+        capture_output=True, text=True, cwd=repo, env=env, timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError("sharded decode benchmark child failed:\n"
+                           + out.stderr[-2000:])
+    for line in out.stdout.splitlines():
+        parts = line.split(",", 2)
+        if len(parts) == 3 and parts[0].startswith("decode_packed_sharded"):
+            row(parts[0], float(parts[1]), parts[2])
+
 
 if __name__ == "__main__":
-    main()
+    if "--sharded-child" in sys.argv:
+        _sharded_child()
+    else:
+        main()

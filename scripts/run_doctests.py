@@ -19,6 +19,7 @@ MODULES = (
     "repro.sparse.backend",
     "repro.quant.scheme",
     "repro.quant.calibrate",
+    "repro.dist.partition",
 )
 
 

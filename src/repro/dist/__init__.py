@@ -1,0 +1,41 @@
+"""repro.dist — sharded packed-sparse decode.
+
+Row balance as device load balance: every row of a packed
+``RowBalancedSparse`` holds exactly NZ survivors, so sharding the 4H gate
+rows across a mesh's ``model`` axis yields perfectly load-balanced shards
+by construction (dual-ratio = different NZ per family, each internally
+balanced). Two modules:
+
+  partition      — the partitioning contract: gate-aligned row
+                   permutation, row-sharded placement of packed
+                   values/indices/scales/bias, replicated embed/head,
+                   and the sharded (c, h, m) cache layouts.
+  collective_ops — shard_map-wrapped kernels and the sharded LSTM decode
+                   steps; the only per-step collective is the small
+                   all-gather of h (the device analogue of the paper's
+                   activation broadcast to PEs).
+
+Serving wires it together: ``ServeEngine(..., mesh=mesh)`` partitions at
+``prepare`` time and decodes model-parallel;
+``ContinuousBatchingEngine(..., mesh=mesh)`` adds data-parallel slot
+batches around the model shards. ``launch.serve --mesh D,M`` drives it
+end to end.
+"""
+from .partition import (check_partitioned, gate_row_permutation,
+                        is_partitionable, model_axis_size, data_axis_size,
+                        partition_lstm_params, permute_packed_rows,
+                        supports_dist)
+from .collective_ops import (batch_axis, dist_delta_lstm_step,
+                             dist_lstm_step, gather_hidden,
+                             sharded_delta_rb_dual_spmv,
+                             sharded_rb_dual_spmv, sharded_rb_dual_spmv_q8)
+
+__all__ = [
+    "check_partitioned",
+    "gate_row_permutation", "is_partitionable", "model_axis_size",
+    "data_axis_size", "partition_lstm_params", "permute_packed_rows",
+    "supports_dist",
+    "batch_axis", "dist_delta_lstm_step", "dist_lstm_step", "gather_hidden",
+    "sharded_delta_rb_dual_spmv", "sharded_rb_dual_spmv",
+    "sharded_rb_dual_spmv_q8",
+]

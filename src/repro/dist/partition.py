@@ -1,0 +1,199 @@
+"""Partitioning contract for sharded packed-sparse LSTM decode.
+
+The paper's central hardware claim — row-balanced pruning equalizes work
+across PEs so no lane stalls — lifts verbatim to device sharding: every
+row of a ``RowBalancedSparse`` holds exactly NZ survivors, so splitting
+the 4H gate rows across the mesh's ``model`` axis yields perfectly
+load-balanced shards *by construction*. Dual-ratio just means the W_x and
+W_h shards carry different NZ, each internally balanced (ESE had to
+scatter irregular CSC work across PEs and eat the imbalance; BRDS —
+and this module — get balance for free from the format).
+
+The contract (everything in ``repro.dist`` and the LSTM dist decode path
+assumes it):
+
+* **Gate-aligned row permutation.** The packed gate rows are laid out
+  ``[f; i; g; o]`` (each H rows). A naive contiguous split of 4H rows
+  would hand shard 0 nothing but forget-gate rows — the elementwise cell
+  update needs aligned (f, i, g, o) quadruples. So partitioning first
+  permutes rows to ``[f_0; i_0; g_0; o_0; f_1; i_1; ...]`` where ``x_j``
+  is hidden slice ``[j·H/n, (j+1)·H/n)`` of gate ``x``: shard ``j``'s
+  contiguous block is a complete ``[f; i; g; o]`` layout over its hidden
+  slice, so it closes the LSTM cell for those units *locally*.
+* **Values, indices, per-row scales, and bias move together** under that
+  permutation (a row permutation never touches the delta-encoded column
+  indices *within* a row — relative addressing is per-row state).
+* **Cache layouts**: ``c`` shards with the gate rows it is updated from
+  (logical axis ``lstm_hidden_shard``); ``h`` stays replicated — it is
+  the activation broadcast every shard's W_h columns consume (the device
+  analogue of the paper's activation broadcast to PEs). The delta path's
+  partial-sum memory ``m`` shards with its rows (``lstm_gates``); the
+  reference states ``x_ref``/``h_ref`` and fired counters stay
+  replicated so Θ-thresholding agrees across shards.
+
+The logical-axis names used here (``packed_rows``, ``lstm_hidden_shard``)
+are registered in :data:`repro.sharding.DEFAULT_RULES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.packing import RowBalancedSparse
+from ..quant import RowBalancedSparseQ8
+from ..sharding import named_sharding
+
+__all__ = ["model_axis_size", "data_axis_size", "gate_row_permutation",
+           "permute_packed_rows", "partition_lstm_params",
+           "is_partitionable", "supports_dist", "check_partitioned"]
+
+PACKED_TYPES = (RowBalancedSparse, RowBalancedSparseQ8)
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    """Size of the mesh's ``model`` axis (1 when absent)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    """Size of the mesh's ``data`` axis (1 when absent)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+
+
+def gate_row_permutation(hidden: int, shards: int) -> np.ndarray:
+    """new→old row index map over the 4H gate rows, gate-aligned per shard.
+
+    ``perm[new]`` is the old row index; shard ``j``'s contiguous block
+    ``[j·4H/n, (j+1)·4H/n)`` holds ``[f_j; i_j; g_j; o_j]`` where each
+    gate slice covers hidden units ``[j·H/n, (j+1)·H/n)``.
+
+    Examples
+    --------
+    >>> gate_row_permutation(2, 2).tolist()   # H=2, [f0 f1 i0 i1 g0 g1 o0 o1]
+    [0, 2, 4, 6, 1, 3, 5, 7]
+    >>> gate_row_permutation(4, 1).tolist() == list(range(16))
+    True
+    """
+    if hidden % shards:
+        raise ValueError(f"hidden={hidden} not divisible by {shards} shards")
+    hs = hidden // shards
+    return np.concatenate([
+        g * hidden + j * hs + np.arange(hs)
+        for j in range(shards) for g in range(4)])
+
+
+def permute_packed_rows(packed, perm: np.ndarray):
+    """Row-permute a packed matrix (or a plain row-indexed array).
+
+    Values, delta-encoded indices, and per-row scales move together; the
+    within-row deltas are untouched (relative addressing is per-row
+    state, so a row permutation never invalidates it).
+    """
+    if isinstance(packed, RowBalancedSparseQ8):
+        return dataclasses.replace(packed, values=packed.values[perm],
+                                   deltas=packed.deltas[perm],
+                                   scales=packed.scales[perm])
+    if isinstance(packed, RowBalancedSparse):
+        return dataclasses.replace(packed, values=packed.values[perm],
+                                   deltas=packed.deltas[perm])
+    return packed[perm]                    # bias / any (4H, ...) array
+
+
+def _packed_shardings(mesh: Mesh, packed):
+    """NamedShardings for one packed matrix's leaves (rule-table driven)."""
+    row2 = lambda a: named_sharding(mesh, ("packed_rows", None), a.shape)
+    row1 = lambda a: named_sharding(mesh, ("packed_rows",), a.shape)
+    if isinstance(packed, RowBalancedSparseQ8):
+        return dataclasses.replace(packed, values=row2(packed.values),
+                                   deltas=row2(packed.deltas),
+                                   scales=row1(packed.scales))
+    return dataclasses.replace(packed, values=row2(packed.values),
+                               deltas=row2(packed.deltas))
+
+
+def is_partitionable(params) -> bool:
+    """Whether ``params`` is a packed LSTM param tree this module shards."""
+    try:
+        return isinstance(params["layers"][0]["w_x"], PACKED_TYPES)
+    except (TypeError, KeyError, IndexError):
+        return False
+
+
+def supports_dist(model, mesh: Mesh) -> bool:
+    """Whether ``model`` can decode through the sharded packed path."""
+    return (hasattr(model, "with_mesh")
+            and getattr(model, "supports_packed_decode", False)
+            and "model" in mesh.axis_names)
+
+
+def check_partitioned(params, mesh: Mesh) -> None:
+    """Raise unless packed LSTM params carry the partitioned layout.
+
+    The gate-aligned permuted layout is invisible in the tree structure —
+    serving unpermuted packed params through the sharded step would split
+    the ``[f; i; g; o]`` rows wrongly and decode garbage WITHOUT an
+    error. The row sharding left by :func:`partition_lstm_params` is the
+    observable witness: packed values must be committed with ``model`` on
+    their row axis. Dense/unpacked trees pass (nothing to shard)."""
+    if model_axis_size(mesh) == 1 or not is_partitionable(params):
+        return
+    v = params["layers"][0]["w_x"].values
+    spec = getattr(getattr(v, "sharding", None), "spec", None)
+    ax = spec[0] if spec else None
+    if not (ax == "model" or (isinstance(ax, tuple) and "model" in ax)):
+        raise ValueError(
+            "packed params are not dist-partitioned (packed values are not "
+            "row-sharded over the 'model' axis): serve the tree returned by "
+            "repro.dist.partition_lstm_params / ServeEngine.prepare(mesh=...)"
+            " — unpartitioned packed params would decode garbage silently")
+
+
+def partition_lstm_params(params, mesh: Mesh):
+    """Shard a SparsityPlan.pack'd LSTM param tree across ``mesh``.
+
+    Gate rows of every layer's packed ``w_x``/``w_h`` (and ``b``, and q8
+    per-row scales) are permuted gate-aligned (:func:`gate_row_permutation`)
+    and placed row-sharded over the ``model`` axis; embed/head params are
+    replicated. The result is device-committed — jit calls pick the
+    layout up without explicit in_shardings.
+
+    The permuted layout is only meaningful to the sharded step
+    (``repro.dist.collective_ops``); serve it through a model carrying
+    the same mesh (``model.with_mesh(mesh)`` — ``ServeEngine.prepare``
+    wires both sides when the engine holds a mesh).
+    """
+    if not is_partitionable(params):
+        raise ValueError(
+            "partition_lstm_params wants a SparsityPlan.pack'd LSTM param "
+            "tree (layers[*].w_x/w_h packed RowBalancedSparse[Q8])")
+    n = model_axis_size(mesh)
+    rows = params["layers"][0]["w_x"].rows
+    hidden = rows // 4
+    if hidden % n:
+        raise ValueError(
+            f"hidden={hidden} not divisible by model axis size {n}; pick a "
+            "mesh whose model axis divides the LSTM hidden size")
+    perm = gate_row_permutation(hidden, n)
+    rep = NamedSharding(mesh, P())
+    out_layers = []
+    for lp in params["layers"]:
+        entry = {}
+        for key, leaf in lp.items():
+            if isinstance(leaf, PACKED_TYPES):
+                pm = permute_packed_rows(leaf, perm)
+                entry[key] = jax.device_put(pm, _packed_shardings(mesh, pm))
+            elif hasattr(leaf, "shape") and leaf.shape[:1] == (rows,):
+                entry[key] = jax.device_put(
+                    leaf[perm],
+                    named_sharding(mesh, ("packed_rows",), leaf.shape))
+            else:
+                entry[key] = jax.device_put(leaf, rep)
+        out_layers.append(entry)
+    out = {}
+    for k, v in params.items():
+        out[k] = out_layers if k == "layers" else jax.tree.map(
+            lambda a: jax.device_put(a, rep), v)
+    return out

@@ -10,6 +10,9 @@ Serves every DecodeStep model — the transformer zoo AND the paper's LSTMs
       --brds --quant int8
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
       --brds --continuous --slots 4
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
+      --brds --mesh 2,4
 """
 from __future__ import annotations
 
@@ -34,6 +37,9 @@ def _build(args):
     if args.quant is not None and not args.brds:
         raise SystemExit("--quant requires --brds (quantization rides the "
                          "packed row-balanced weights)")
+    if args.mesh is not None and args.arch in LSTM_CONFIGS and not args.brds:
+        raise SystemExit("--mesh on an LSTM requires --brds (sharded decode "
+                         "row-shards the packed gate rows — repro.dist)")
     if args.arch in LSTM_CONFIGS:
         cfg = LSTM_CONFIGS[args.arch]
         if args.smoke:
@@ -123,6 +129,13 @@ def main():
     ap.add_argument("--top-p", type=float, default=0.0,
                     help="nucleus sampling mass in (0, 1); 0 disables")
     ap.add_argument("--eos-id", type=int, default=-1)
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve through a (data, model) device mesh, e.g. "
+                         "'2,4' (repro.dist sharded packed decode; for the "
+                         "LSTM requires --brds so the gate rows can be "
+                         "row-sharded — force host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N to try "
+                         "on CPU)")
     ap.add_argument("--continuous", action="store_true",
                     help="serve a ragged request stream through the "
                          "continuous-batching scheduler instead of one "
@@ -135,6 +148,21 @@ def main():
     from repro.sparse import set_default_backend
 
     set_default_backend(args.backend)
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_host_mesh
+        try:
+            d, m = (int(v) for v in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh wants 'DATA,MODEL' ints, got "
+                             f"{args.mesh!r}")
+        try:
+            mesh = make_host_mesh(data=d, model=m)
+        except ValueError as e:
+            raise SystemExit(
+                f"--mesh {args.mesh}: {e} (force host devices with "
+                "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        print(f"mesh: data={d} model={m} over {d * m} devices")
     model, cfg, vocab, sparsity, extra_fn = _build(args)
     params = model.init(jax.random.key(0))
     n = sum(x.size for x in jax.tree.leaves(params))
@@ -142,7 +170,7 @@ def main():
 
     max_len = args.prompt_len + args.gen
     eng = ServeEngine(model, cfg, max_len=max_len, batch=args.batch,
-                      sparsity=sparsity)
+                      sparsity=sparsity, mesh=mesh)
     calib = None
     if args.quant:
         # calibrate activation scales on a prompt-shaped batch through the
@@ -158,9 +186,12 @@ def main():
                               top_p=args.top_p, eos_id=args.eos_id)
 
     if args.continuous:
-        # eng.model carries the delta wiring applied by prepare
+        # eng.model carries the delta/quant/mesh wiring applied by prepare;
+        # only dist-partitioned serving passes the mesh through (the
+        # scheduler has no sharded path for the transformer zoo)
         sched = ContinuousBatchingEngine(eng.model, params, slots=args.slots,
-                                         max_len=max_len, sampling=sampling)
+                                         max_len=max_len, sampling=sampling,
+                                         mesh=mesh if eng._dist else None)
         lens = [max(4, args.prompt_len - 3 * i) for i in range(args.batch)]
         for i, plen in enumerate(lens):
             req_rng = jax.random.fold_in(rng, i)

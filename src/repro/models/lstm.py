@@ -54,22 +54,39 @@ class LSTMModel:
     (RowBalancedSparseQ8 leaves): every step dispatches the q8 kernels
     (integer products, int32 accumulate, per-row dequant). Quantized
     params without a plan still serve — the kernels fall back to dynamic
-    max-abs activation scales."""
+    max-abs activation scales.
 
-    def __init__(self, cfg: LSTMConfig, delta=None, quant=None):
+    ``mesh`` (a jax Mesh with a ``model`` axis, or None) switches packed
+    decode to the sharded path (``repro.dist``): params must be
+    ``partition_lstm_params``' gate-aligned row-sharded layout, the cache
+    keeps c (and the delta partial sums m) sharded with h replicated, and
+    each step's only collective is the all-gather of h. Composes with
+    ``delta`` and ``quant``."""
+
+    def __init__(self, cfg: LSTMConfig, delta=None, quant=None, mesh=None):
         self.cfg = cfg
         self.delta = delta
         self.quant = quant
+        self.mesh = mesh
 
     def with_delta(self, delta) -> "LSTMModel":
         """Copy of this model serving through the temporal-delta path
         (``delta``: a DeltaGateConfig, or None to disable)."""
-        return LSTMModel(self.cfg, delta=delta, quant=self.quant)
+        return LSTMModel(self.cfg, delta=delta, quant=self.quant,
+                         mesh=self.mesh)
 
     def with_quant(self, quant) -> "LSTMModel":
         """Copy of this model carrying a quantization plan
         (``quant``: a repro.quant.QuantPlan, or None to disable)."""
-        return LSTMModel(self.cfg, delta=self.delta, quant=quant)
+        return LSTMModel(self.cfg, delta=self.delta, quant=quant,
+                         mesh=self.mesh)
+
+    def with_mesh(self, mesh) -> "LSTMModel":
+        """Copy of this model decoding through the sharded packed path
+        (``mesh``: a Mesh with a ``model`` axis — serve it
+        ``repro.dist.partition_lstm_params``' layout — or None)."""
+        return LSTMModel(self.cfg, delta=self.delta, quant=self.quant,
+                         mesh=mesh)
 
     # ------------------------------------------------------------- params
     def param_defs(self) -> dict:
@@ -306,10 +323,17 @@ class LSTMModel:
         layer: the reference states ``x_ref`` (B, X_in) / ``h_ref``
         (B, H), the fp32 partial-sum memory ``m`` (B, 4H), and cumulative
         fired-column counters ``nx``/``nh`` (B,) — the effective-ops
-        numerators ``repro.sparse.occupancy_report`` reduces."""
+        numerators ``repro.sparse.occupancy_report`` reduces.
+
+        With a ``mesh`` the sharded-decode layouts apply: ``c`` carries
+        the ``lstm_hidden_shard`` logical axis (model-sharded with the
+        gate rows it is updated from) while ``h`` stays replicated — the
+        per-step activation broadcast (``m`` already rides the
+        model-sharded ``lstm_gates`` axis)."""
         cfg = self.cfg
+        c_ax = "lstm_hidden_shard" if self.mesh is not None else "lstm_hidden"
         defs = {"layers": [
-            {"c": L.PSpec((batch, cfg.hidden), ("batch", "lstm_hidden"),
+            {"c": L.PSpec((batch, cfg.hidden), ("batch", c_ax),
                           init="zeros", dtype=cfg.dtype),
              "h": L.PSpec((batch, cfg.hidden), ("batch", "lstm_hidden"),
                           init="zeros", dtype=cfg.dtype)}
@@ -343,6 +367,13 @@ class LSTMModel:
         cfg = self.cfg
         packed = self.is_packed(params)
         quantized = packed and self.is_quantized(params)
+        if packed and self.mesh is not None:
+            from ..dist import collective_ops as C
+            scales = ([self._act_scales(i) for i in range(cfg.num_layers)]
+                      if quantized else None)
+            return C.dist_lstm_step(self.mesh, params["layers"], x_t, state,
+                                    pwl=cfg.pwl_activations, dtype=cfg.dtype,
+                                    act_scales=scales)
         new_state = []
         inp = x_t
         for i, (lp, (c, h)) in enumerate(zip(params["layers"], state)):
@@ -378,6 +409,19 @@ class LSTMModel:
         d = self.delta
         packed = self.is_packed(params)
         quantized = packed and self.is_quantized(params)
+        if packed and self.mesh is not None:
+            from ..dist import collective_ops as C
+            scales = None
+            if quantized:
+                # same delta-range doubling as the loop below: the
+                # calibrated scales bound absolute activations, a delta
+                # spans twice that range
+                scales = [tuple(None if s is None else 2.0 * s
+                                for s in self._act_scales(i))
+                          for i in range(cfg.num_layers)]
+            return C.dist_delta_lstm_step(
+                self.mesh, params["layers"], x_t, state, d,
+                pwl=cfg.pwl_activations, dtype=cfg.dtype, act_scales=scales)
         new_state = []
         inp = x_t
         for i, (lp, st) in enumerate(zip(params["layers"], state)):

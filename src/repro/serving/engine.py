@@ -57,6 +57,11 @@ class ServeEngine:
         self.batch = batch
         self.sparsity = sparsity
         self._loops: dict = {}
+        # flipped by prepare() when params get dist-partitioned (sharded
+        # packed decode): the loop then jits WITHOUT explicit shardings —
+        # partitioned params are device-committed and the model's
+        # shard_map step pins the cache layout
+        self._dist = False
         if mesh is not None:
             self._p_sh = param_shardings(mesh, model)
             self._c_sh = cache_shardings(mesh, model, batch, max_len)
@@ -124,8 +129,25 @@ class ServeEngine:
             pack = getattr(self.model, "supports_packed_decode", False)
         if pack:
             packed, pack_report = plan.pack(pruned, masks)
+            packed = self._maybe_partition(packed)
             return packed, {**report, **pack_report}
         return pruned, report
+
+    def _maybe_partition(self, packed):
+        """Shard packed params across the engine's mesh (repro.dist):
+        gate-aligned row-sharded weights, model rewired to the sharded
+        decode step. No-op without a mesh / a model-axis / packed leaves."""
+        from .. import dist
+        if (self.mesh is None or not dist.supports_dist(self.model, self.mesh)
+                or not dist.is_partitionable(packed)):
+            return packed
+        packed = dist.partition_lstm_params(packed, self.mesh)
+        self.model = self.model.with_mesh(self.mesh)
+        self._dist = True
+        self._prefill = jax.jit(self.model.prefill,
+                                static_argnames=("max_len",))
+        self._loops.clear()
+        return packed
 
     # ------------------------------------------------------------ decode
     def _loop(self, steps: int, sampling: SamplingConfig):
@@ -136,7 +158,7 @@ class ServeEngine:
                 return runtime.decode_loop(
                     self.model, params, cache, logits, pos, rng, steps,
                     sampling, limit=self.max_len)
-            if self.mesh is not None:
+            if self.mesh is not None and not self._dist:
                 fn = jax.jit(run,
                              in_shardings=(self._p_sh, self._c_sh,
                                            self._b_sh, self._scalar,
@@ -165,6 +187,12 @@ class ServeEngine:
                                       eos_id=eos_id)
         if rng is None:
             rng = jax.random.key(0)
+        if getattr(self.model, "mesh", None) is not None:
+            # packed-but-unpartitioned params would decode garbage silently
+            # through the sharded step (the permuted layout is invisible in
+            # the tree structure) — O(1) sharding check
+            from ..dist import check_partitioned
+            check_partitioned(params, self.model.mesh)
         logits, cache = self._prefill(params, tokens, max_len=self.max_len,
                                       extra=extra)
         pos = jnp.int32(tokens.shape[1])

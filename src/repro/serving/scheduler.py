@@ -54,15 +54,34 @@ class ContinuousBatchingEngine:
     ``params`` may be dense, pruned, or SparsityPlan.pack'd — the model's
     decode_step dispatches (the BRDS LSTM runs rb_dual_spmv + lstm_gates on
     packed params).
+
+    ``mesh`` turns on sharded serving (repro.dist): the slot batch runs
+    data-parallel over the mesh's ``data`` axis (when it divides the slot
+    count; batch=1 prefills replicate) with model-parallel row shards
+    inside each replica group. ``params`` must then be
+    ``repro.dist.partition_lstm_params``' layout — ``ServeEngine.prepare``
+    with the same mesh produces it (and a model already carrying the mesh,
+    in which case ``mesh=`` here is redundant but harmless).
     """
 
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
                  sampling: SamplingConfig = SamplingConfig(),
-                 chunk: int = 8, seed: int = 0):
+                 chunk: int = 8, seed: int = 0, mesh=None):
         if not runtime.conforms(model):
             raise TypeError(
                 f"{type(model).__name__} does not implement the DecodeStep "
                 "serving contract (cache_defs / prefill / decode_step)")
+        if mesh is not None and getattr(model, "mesh", None) is None:
+            if not hasattr(model, "with_mesh"):
+                raise TypeError(f"{type(model).__name__} has no sharded "
+                                "decode path (with_mesh)")
+            model = model.with_mesh(mesh)
+        if getattr(model, "mesh", None) is not None:
+            # the permuted dist layout is invisible in the tree structure;
+            # reject packed-but-unpartitioned params before they decode
+            # garbage silently
+            from ..dist import check_partitioned
+            check_partitioned(params, model.mesh)
         self.model = model
         self.params = params
         self.slots = slots

@@ -42,6 +42,15 @@ DEFAULT_RULES: dict[str, list] = {
     "layers":    [None],                  # scan-stacked leading dim
     "lstm_gates": [("model",), None],     # the LSTM 4H gate dim
     "lstm_hidden": [None],
+    # repro.dist packed-sparse serving: the row dim of a packed
+    # RowBalancedSparse[Q8] (values/deltas/scales/bias move together —
+    # every row holds exactly NZ survivors, so a row split is perfectly
+    # load-balanced by construction)
+    "packed_rows": [("model",), None],
+    # the dist decode cache's hidden slice: c shards with the gate rows
+    # it is updated from, while h stays replicated ("lstm_hidden") — it
+    # is the activation broadcast every shard's W_h columns consume
+    "lstm_hidden_shard": [("model",), None],
     "conv":      [None],
     "zero":      [("data",), None],       # ZeRO-1 optimizer-state dim
 }

@@ -1,0 +1,220 @@
+"""Sharded packed-sparse decode (repro.dist) parity on forced host meshes.
+
+The paper's row-balance invariant lifted to devices: packed gate rows
+shard perfectly evenly over the mesh's ``model`` axis, each shard closes
+the LSTM cell for its hidden slice locally, and the only per-step
+collective is the h all-gather. These tests assert the sharded decode is
+*the same computation*: per data-replica group, trajectories are BITWISE
+the single-device ``backend="ref"`` trajectories of that group's
+sub-batch (at Θ=0 and for the calibrated q8 path; Θ>0 fired sets derive
+from replicated thresholding, so they agree too).
+
+jax locks the device count at first init, so each scenario runs in a
+subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the
+same pattern as test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.models import LSTMModel, LSTMConfig
+from repro.serving import ServeEngine, ContinuousBatchingEngine
+from repro.sparse import (DeltaGateConfig, QuantConfig, lstm_policy,
+                          use_backend)
+from repro.launch.mesh import make_host_mesh
+
+CFG = LSTMConfig('t', input_size=16, hidden=64, num_layers=2, vocab_size=50)
+MODEL = LSTMModel(CFG)
+PARAMS = MODEL.init(jax.random.key(0))
+B = 4
+PROMPT = jax.random.randint(jax.random.key(1), (B, 7), 0, CFG.vocab_size)
+CALIB = jax.random.randint(jax.random.key(3), (2, 6), 0, CFG.vocab_size)
+
+def serve(policy, mesh, batch, prompt, calib=None):
+    eng = ServeEngine(MODEL, CFG, max_len=20, batch=batch, sparsity=policy,
+                      mesh=mesh)
+    p, _ = eng.prepare(PARAMS, calib=calib)
+    if mesh is not None:
+        assert eng._dist, 'engine did not take the repro.dist path'
+    toks, st = eng.generate(p, prompt, 6, return_state=True)
+    return np.asarray(toks), np.asarray(st['logits'])
+
+def group_ref(policy_fn, d, calib=None):
+    # single-device reference per data-replica group: DP means each group
+    # decodes its sub-batch exactly as one device would decode it alone
+    g = B // d
+    toks, logits = [], []
+    for r in range(d):
+        t, l = serve(policy_fn(), None, g, PROMPT[r * g:(r + 1) * g],
+                     calib=calib)
+        toks.append(t)
+        logits.append(l)
+    return np.concatenate(toks), np.concatenate(logits)
+"""
+
+
+def _run(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = REPO_SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_sharded_kernel_parity():
+    """shard_map kernel wrappers == the unsharded ops, bitwise on a
+    model-only mesh (every output row is computed by exactly one shard
+    with unchanged per-row arithmetic); partition validation errors."""
+    _run(_PRELUDE + """
+    from repro import dist
+    from repro.core.packing import pack_from_dense
+    from repro.kernels import ops as K
+    from repro.quant import quantize_packed
+
+    mesh = make_host_mesh(1, 8)
+    sx = pack_from_dense(jax.random.normal(jax.random.key(0), (256, 48)), .75)
+    sh = pack_from_dense(jax.random.normal(jax.random.key(1), (256, 64)), .5)
+    x = jax.random.normal(jax.random.key(2), (4, 48))
+    h = jax.random.normal(jax.random.key(3), (4, 64))
+    b = jax.random.normal(jax.random.key(4), (256,))
+    m = jax.random.normal(jax.random.key(5), (4, 256))
+    fx, fh = jnp.abs(x) > 0.5, jnp.abs(h) > 0.5
+
+    ref = K.rb_dual_spmv(sx, x, sh, h, b, backend='ref')
+    out = dist.sharded_rb_dual_spmv(mesh, sx, x, sh, h, b, backend='ref')
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+    ref = K.delta_rb_dual_spmv(sx, x, fx, sh, h, fh, m, backend='ref')
+    out = dist.sharded_delta_rb_dual_spmv(mesh, sx, x, fx, sh, h, fh, m,
+                                          backend='ref')
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+    qx, qh = quantize_packed(sx, 'int8'), quantize_packed(sh, 'int8')
+    ref = K.rb_dual_spmv_q8(qx, x, qh, h, b, backend='ref')
+    out = dist.sharded_rb_dual_spmv_q8(mesh, qx, x, qh, h, b, backend='ref')
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+    # the Pallas kernels run inside the shard_map region too
+    ref = K.rb_dual_spmv(sx, x, sh, h, b, backend='pallas')
+    out = dist.sharded_rb_dual_spmv(mesh, sx, x, sh, h, b, backend='pallas')
+    assert np.allclose(np.asarray(ref), np.asarray(out), atol=1e-5)
+
+    # gate-aligned permutation: shard j's block is [f_j; i_j; g_j; o_j]
+    perm = dist.gate_row_permutation(64, 8)
+    assert sorted(perm.tolist()) == list(range(256))
+    assert perm[:8].tolist() == list(range(8))            # f_0
+    assert perm[8:16].tolist() == list(range(64, 72))     # i_0
+
+    # validation: non-divisible hidden / rows are rejected
+    try:
+        dist.gate_row_permutation(30, 4)
+        assert False, 'expected ValueError'
+    except ValueError:
+        pass
+    plan = lstm_policy(0.5, 0.5).compile(PARAMS)
+    packed, _ = plan.pack(*plan.prune(PARAMS))
+    try:
+        dist.partition_lstm_params({'layers': [{'w_x': 1}]}, mesh)
+        assert False, 'expected ValueError'
+    except ValueError:
+        pass
+    # partitioned tree keeps structure; leaves land sharded
+    pp = dist.partition_lstm_params(packed, mesh)
+    assert jax.tree.structure(pp) == jax.tree.structure(packed)
+    spec = pp['layers'][0]['w_x'].values.sharding.spec
+    assert spec[0] == 'model', spec
+    # packed-but-UNPARTITIONED params are rejected before they decode
+    # garbage through the sharded step (the permutation is invisible in
+    # the tree structure — the row sharding is the witness)
+    dist.check_partitioned(pp, mesh)
+    try:
+        ContinuousBatchingEngine(MODEL, packed, slots=2, max_len=16,
+                                 mesh=mesh)
+        assert False, 'expected ValueError'
+    except ValueError:
+        pass
+    eng = ServeEngine(MODEL.with_mesh(mesh), CFG, max_len=16, batch=2)
+    try:
+        eng.generate(packed, PROMPT[:2, :4], 2)
+        assert False, 'expected ValueError'
+    except ValueError:
+        pass
+    print('kernel parity ok')
+    """)
+
+
+@pytest.mark.parametrize("d,m", [(1, 8), (2, 4), (4, 2)])
+def test_sharded_decode_trajectory_parity(d, m):
+    """Packed, delta (Θ=0 / Θ>0 / capped), and calibrated q8 sharded
+    decode == single-device ref trajectories per replica group, bitwise
+    at Θ=0 (and everywhere thresholding is deterministic)."""
+    _run(_PRELUDE + f"""
+    D, M = {d}, {m}
+    mesh = make_host_mesh(D, M)
+    cases = {{
+        'packed': (lambda: lstm_policy(0.75, 0.5), None),
+        'delta0': (lambda: lstm_policy(
+            0.75, 0.5, delta=DeltaGateConfig()), None),
+        'delta+': (lambda: lstm_policy(
+            0.75, 0.5, delta=DeltaGateConfig(0.05, 0.02)), None),
+        'delta_cap': (lambda: lstm_policy(
+            0.75, 0.5, delta=DeltaGateConfig(0.05, 0.05, cap_x=0.5,
+                                             cap_h=0.5)), None),
+        'q8': (lambda: lstm_policy(
+            0.75, 0.5, quant=QuantConfig('int8')), CALIB),
+        'delta_q8': (lambda: lstm_policy(
+            0.75, 0.5, delta=DeltaGateConfig(),
+            quant=QuantConfig('int8')), CALIB),
+    }}
+    with use_backend('ref'):
+        for name, (polf, calib) in cases.items():
+            toks_sh, logits_sh = serve(polf(), mesh, B, PROMPT, calib=calib)
+            toks_ref, logits_ref = group_ref(polf, D, calib=calib)
+            assert np.array_equal(toks_ref, toks_sh), (name, D, M)
+            assert np.array_equal(logits_ref, logits_sh), \\
+                (name, D, M, np.abs(logits_ref - logits_sh).max())
+            print(name, 'bitwise ok')
+    """)
+
+
+def test_sharded_continuous_batching_parity():
+    """The scheduler's mesh path (data-parallel slot batch around
+    model-parallel shards) reproduces per-request single-device decode."""
+    _run(_PRELUDE + """
+    pol = lambda: lstm_policy(0.75, 0.5)
+    with use_backend('ref'):
+        mesh = make_host_mesh(2, 4)
+        eng = ServeEngine(MODEL, CFG, max_len=24, batch=2, sparsity=pol(),
+                          mesh=mesh)
+        packed, _ = eng.prepare(PARAMS)
+        # eng.model carries the mesh; mesh= is exercised for the
+        # build-it-yourself path
+        sched = ContinuousBatchingEngine(eng.model, packed, slots=2,
+                                         max_len=24, chunk=4, mesh=mesh)
+        ref_eng = ServeEngine(MODEL, CFG, max_len=24, batch=1,
+                              sparsity=pol())
+        ref_packed, _ = ref_eng.prepare(PARAMS)
+        prompts, budgets = {}, {}
+        for i, (plen, gen) in enumerate([(5, 6), (9, 3), (3, 7), (7, 5)]):
+            p = jax.random.randint(jax.random.key(10 + i), (1, plen), 0,
+                                   CFG.vocab_size)
+            uid = sched.submit(p, gen)
+            prompts[uid], budgets[uid] = p, gen
+        results = sched.run()
+        assert sched.pending == 0 and not sched.active_slots
+        for uid, p in prompts.items():
+            want = np.asarray(ref_eng.generate(ref_packed, p,
+                                               budgets[uid]))[0]
+            np.testing.assert_array_equal(results[uid], want)
+    print('sharded continuous batching ok')
+    """)

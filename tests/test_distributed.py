@@ -65,14 +65,12 @@ def test_compressed_psum_matches_exact():
     feedback keeps the running sum unbiased."""
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
     from repro.training.compression import compressed_psum
+    from repro.launch.mesh import make_mesh   # owns the AxisType shim
 
-    # axis_types= / jax.sharding.AxisType only exist on jax >= 0.5
-    at = getattr(jax.sharding, 'AxisType', None)
-    kw = dict(axis_types=(at.Auto,)) if at is not None else {}
-    mesh = jax.make_mesh((8,), ('data',), **kw)
+    mesh = make_mesh((8,), ('data',))
     g = jnp.asarray(np.random.default_rng(0).normal(size=(8, 64)), jnp.float32)
 
     def f(gl, res):

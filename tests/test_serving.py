@@ -262,6 +262,38 @@ def test_packed_continuous_batching(lstm):
             np.testing.assert_array_equal(results[uid], want)
 
 
+def test_slot_reuse_resets_position_and_eos(lstm):
+    """Evict-then-readmit into the SAME slot: the readmitted request must
+    start from its own prompt's cache position with fresh EOS state (a
+    slot whose previous occupant hit EOS mid-chunk must not bleed its
+    done flag or cache position into the next occupant)."""
+    cfg, model, params = lstm
+    eng = ServeEngine(model, cfg, max_len=24, batch=1)
+    p_a = jax.random.randint(jax.random.key(20), (1, 5), 0, cfg.vocab_size)
+    p_b = jax.random.randint(jax.random.key(21), (1, 9), 0, cfg.vocab_size)
+    greedy_a = np.asarray(eng.generate(params, p_a, 8))[0]
+    eos = int(greedy_a[1])                  # A hits EOS on its 2nd token,
+    sampling = SamplingConfig(eos_id=eos)   # mid-chunk (chunk=4 below)
+
+    sched = ContinuousBatchingEngine(model, params, slots=1, max_len=24,
+                                     chunk=4, sampling=sampling)
+    uid_a = sched.submit(p_a, 8)
+    uid_b = sched.submit(p_b, 6)
+    fin = sched.step()                      # A admitted alone (1 slot)
+    assert [f.uid for f in fin] == [uid_a]  # EOS inside the first chunk
+    assert sched._slot_uid[0] is None       # slot 0 evicted...
+    results = {fin[0].uid: fin[0].tokens}
+    results.update(sched.run())             # ...and reused by B
+
+    # B decoded from ITS position with fresh EOS state: exact lockstep
+    # parity (same eos_id so any natural EOS matches too)
+    want_b = np.asarray(eng.generate(params, p_b, 6, sampling=sampling))[0]
+    np.testing.assert_array_equal(results[uid_b], want_b)
+    # A's tokens end at EOS and the readmit reset the slot's accounting
+    assert int(results[uid_a][-1]) == eos and len(results[uid_a]) == 2
+    assert sched.slot_steps[0] >= p_b.shape[1]  # restarted at B's join
+
+
 def test_pack_preserves_zero_survivors(lstm):
     """Satellite regression: a surviving weight that is exactly zero must
     stay in the packed representation (w != 0 packing dropped it and broke
