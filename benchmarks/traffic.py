@@ -1,0 +1,116 @@
+"""traffic: the serving latency curve under a production-style load.
+
+Drives the continuous-batching scheduler with seeded Poisson arrival
+traces (repro.traffic.loadgen) and records the latency curve the paper's
+throughput tables cannot show: time-to-first-token and per-output-token
+percentiles as a function of offered load, plus goodput (tokens from
+requests that met their deadline).
+
+Two families of rows:
+
+  traffic_load_rN      — open-loop (arrival-paced) serving at N req/s on
+                         the packed BRDS weights; derived columns carry
+                         p50/p90/p99 TTFT, p50/p99 TPOT, goodput, drops.
+                         At least two load points so the JSON captures a
+                         curve, not a sample.
+  traffic_steady_*     — closed-loop (submit-all, drain) throughput with
+                         many slots: `ahead` keeps dispatch_depth decode
+                         chunks in flight ahead of the host, `sync`
+                         harvests each chunk before dispatching the next
+                         (dispatch_depth=1). The `speedup` column is the
+                         dispatch-ahead win — host-side bookkeeping and
+                         token streaming overlapped with device compute.
+
+Every trace is deterministic (seeded); wall-clock never enters the
+arrival schedule, only the measurements.
+"""
+import jax
+
+from repro.models import LSTMModel
+from repro.serving import ContinuousBatchingEngine, SamplingConfig
+from repro.sparse import lstm_policy, use_backend
+from repro.traffic import LoadConfig, poisson_trace, make_prompts, \
+    serve_trace
+from .common import bench_lstm_cfg, smoke, row
+
+SLOTS_LOAD = smoke(4, 16)          # slots for the load-sweep points
+SLOTS_STEADY = smoke(8, 64)        # slots for the sync-vs-ahead compare
+N_REQ = smoke(10, 64)              # requests per load point
+MAX_LEN = smoke(48, 96)
+CHUNK = 8
+RATES = smoke((16.0, 64.0), (8.0, 32.0, 128.0))   # offered req/s points
+
+
+def _load_cfg(rate, seed=0):
+    hi = MAX_LEN // 2
+    return LoadConfig(rate=rate, num_requests=N_REQ,
+                      prompt_short=(4, max(5, hi // 4)),
+                      prompt_long=(max(5, hi // 4), hi),
+                      output_lens=(4, MAX_LEN // 4),
+                      deadline=smoke(30.0, 10.0), seed=seed)
+
+
+def _fresh(model, packed, slots, depth):
+    return ContinuousBatchingEngine(model, packed, slots=slots,
+                                    max_len=MAX_LEN,
+                                    sampling=SamplingConfig(), chunk=CHUNK,
+                                    dispatch_depth=depth)
+
+
+def main():
+    cfg = bench_lstm_cfg()
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    plan = lstm_policy(0.875, 0.75, backend="ref").compile(params)
+    pruned, masks = plan.prune(params)
+    packed, _ = plan.pack(pruned, masks)
+
+    with use_backend("ref"):
+        # ---- open-loop latency curve: ≥2 offered-load points ----------
+        for rate in RATES:
+            lc = _load_cfg(rate)
+            trace = poisson_trace(lc)
+            prompts = make_prompts(trace, cfg.vocab_size, seed=lc.seed)
+            sched = _fresh(model, packed, SLOTS_LOAD, 2)
+            # warmup pass compiles every prompt bucket / chunk shape on
+            # THIS scheduler instance (jits are per-instance), so the
+            # timed pass measures serving, not compilation
+            serve_trace(sched, trace, prompts, realtime=False)
+            _, s = serve_trace(sched, trace, prompts, offered_rps=rate)
+            mean_ttft_us = s["p50_ttft_ms"] * 1e3
+            row(f"traffic_load_r{int(rate)}", mean_ttft_us,
+                f"p50_ttft_ms={s['p50_ttft_ms']:.2f} "
+                f"p90_ttft_ms={s['p90_ttft_ms']:.2f} "
+                f"p99_ttft_ms={s['p99_ttft_ms']:.2f} "
+                f"p50_tpot_ms={s['p50_tpot_ms']:.3f} "
+                f"p99_tpot_ms={s['p99_tpot_ms']:.3f} "
+                f"goodput_tps={s['goodput_tps']:.1f} "
+                f"offered_rps={rate:.1f} "
+                f"completed={s['completed']} expired={s['expired']} "
+                f"rejected={s['rejected']}")
+
+        # ---- closed-loop steady state: dispatch-ahead vs synchronous --
+        lc = _load_cfg(RATES[-1], seed=1)
+        trace = poisson_trace(lc)
+        prompts = make_prompts(trace, cfg.vocab_size, seed=lc.seed)
+        walls = {}
+        for label, depth in (("sync", 1), ("ahead", 2)):
+            sched = _fresh(model, packed, SLOTS_STEADY, depth)
+            serve_trace(sched, trace, prompts, realtime=False)   # warmup
+            _, s = serve_trace(sched, trace, prompts, realtime=False,
+                               offered_rps=None)
+            walls[label] = s
+        for label in ("sync", "ahead"):
+            s = walls[label]
+            extra = ""
+            if label == "ahead":
+                extra = (f" speedup={walls['sync']['wall_s'] / max(s['wall_s'], 1e-9):.2f}x"
+                         f" slots={SLOTS_STEADY}")
+            row(f"traffic_steady_{label}",
+                s["wall_s"] / max(s["tokens"], 1) * 1e6,
+                f"toks_per_s={s['toks_per_s']:.1f} "
+                f"wall_s={s['wall_s']:.3f}" + extra)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Assert the machine-readable benchmark JSON keeps its schema.
+
+The harness diffs BENCH_<module>.json across PRs; a module that silently
+drops a derived column (or stops emitting a row family) corrupts the perf
+trajectory without failing any test. This checker pins the contract for
+the records downstream tooling reads:
+
+  BENCH_traffic.json
+    - ≥2 traffic_load_r* rows (a latency CURVE needs at least two offered
+      loads), each with p50/p99 TTFT, p50/p99 TPOT, goodput, offered_rps
+    - exactly one traffic_steady_sync and one traffic_steady_ahead row
+      (the dispatch-ahead comparison), each with toks_per_s; the ahead
+      row carries the speedup column
+
+  every BENCH_*.json
+    - top-level benchmark/smoke/wall_time_s/rows keys, rows a list of
+      dicts each with name + us_per_call
+
+Usage: python scripts/check_bench_schema.py [dir-with-BENCH-json]
+"""
+import glob
+import json
+import os
+import sys
+
+
+def fail(msg):
+    print(f"check_bench_schema: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def check_common(path, payload):
+    for key in ("benchmark", "smoke", "wall_time_s", "rows"):
+        if key not in payload:
+            fail(f"{path}: missing top-level key {key!r}")
+    if not isinstance(payload["rows"], list):
+        fail(f"{path}: rows is not a list")
+    for r in payload["rows"]:
+        if "name" not in r or "us_per_call" not in r:
+            fail(f"{path}: row missing name/us_per_call: {r}")
+
+
+def check_traffic(path, payload):
+    rows = {r["name"]: r for r in payload["rows"]}
+    load_rows = [r for n, r in rows.items() if n.startswith("traffic_load_r")]
+    if len(load_rows) < 2:
+        fail(f"{path}: latency curve needs >=2 traffic_load_r* rows, "
+             f"got {len(load_rows)}")
+    need = ("p50_ttft_ms", "p90_ttft_ms", "p99_ttft_ms", "p50_tpot_ms",
+            "p99_tpot_ms", "goodput_tps", "offered_rps", "completed",
+            "expired", "rejected")
+    for r in load_rows:
+        for k in need:
+            if k not in r:
+                fail(f"{path}: {r['name']} missing {k!r}")
+        if r["p99_ttft_ms"] < r["p50_ttft_ms"]:
+            fail(f"{path}: {r['name']} p99_ttft_ms < p50_ttft_ms")
+    for name in ("traffic_steady_sync", "traffic_steady_ahead"):
+        if name not in rows:
+            fail(f"{path}: missing {name} row")
+        if "toks_per_s" not in rows[name]:
+            fail(f"{path}: {name} missing toks_per_s")
+    if "speedup" not in rows["traffic_steady_ahead"]:
+        fail(f"{path}: traffic_steady_ahead missing speedup column")
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if not paths:
+        fail(f"no BENCH_*.json found in {out_dir!r}")
+    saw_traffic = False
+    for path in paths:
+        with open(path) as f:
+            payload = json.load(f)
+        check_common(path, payload)
+        if payload["benchmark"] == "traffic":
+            check_traffic(path, payload)
+            saw_traffic = True
+    if not saw_traffic:
+        fail("BENCH_traffic.json not produced (traffic module not "
+             "registered in benchmarks/run.py?)")
+    print(f"check_bench_schema: OK ({len(paths)} files, traffic schema "
+          "verified)")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,8 @@ Serves every DecodeStep model — the transformer zoo AND the paper's LSTMs
       --brds --quant int8
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
       --brds --continuous --slots 4
+  PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
+      --brds --traffic --rate 16 --requests 64 --slots 8 --deadline 2.0
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
       --brds --mesh 2,4
@@ -141,6 +143,26 @@ def main():
                          "continuous-batching scheduler instead of one "
                          "lockstep batch")
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--traffic", action="store_true",
+                    help="drive the scheduler with a seeded Poisson arrival "
+                         "trace (repro.traffic.loadgen) and report the "
+                         "latency curve: TTFT/TPOT percentiles, goodput, "
+                         "drops. Composes with --brds/--delta/--quant/"
+                         "--mesh; uses --slots and --dispatch-depth")
+    ap.add_argument("--rate", type=float, default=8.0,
+                    help="--traffic: offered load, requests/second")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="--traffic: total requests in the trace")
+    ap.add_argument("--deadline", type=float, default=None, metavar="SEC",
+                    help="--traffic: per-request TTLT deadline; queued "
+                         "requests expire and in-slot requests are evicted "
+                         "past it (overload shedding)")
+    ap.add_argument("--dispatch-depth", type=int, default=2,
+                    help="decode chunks kept in flight ahead of the host "
+                         "(1 = synchronous harvest-before-dispatch)")
+    ap.add_argument("--load-seed", type=int, default=0,
+                    help="--traffic: arrival-trace RNG seed (the schedule "
+                         "is fully deterministic given the seed)")
     args = ap.parse_args()
 
     from repro.serving import (ServeEngine, ContinuousBatchingEngine,
@@ -184,6 +206,40 @@ def main():
     rng = jax.random.key(1)
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
                               top_p=args.top_p, eos_id=args.eos_id)
+
+    if args.traffic:
+        from repro.traffic import LoadConfig, poisson_trace, make_prompts, \
+            serve_trace
+        sched = ContinuousBatchingEngine(
+            eng.model, params, slots=args.slots, max_len=max_len,
+            sampling=sampling, dispatch_depth=args.dispatch_depth,
+            mesh=mesh if eng._dist else None)
+        short_hi = max(5, args.prompt_len // 4)
+        long_hi = max(short_hi + 1, args.prompt_len)
+        lc = LoadConfig(rate=args.rate, num_requests=args.requests,
+                        prompt_short=(4, short_hi),
+                        prompt_long=(short_hi, long_hi),
+                        output_lens=(4, args.gen), deadline=args.deadline,
+                        seed=args.load_seed)
+        trace = poisson_trace(lc)
+        prompts = make_prompts(trace, vocab, seed=args.load_seed)
+        print(f"traffic: {args.requests} requests at {args.rate:.1f} req/s, "
+              f"slots={args.slots} depth={args.dispatch_depth}"
+              + (f" deadline={args.deadline}s" if args.deadline else ""))
+        records, summary = serve_trace(sched, trace, prompts,
+                                       offered_rps=args.rate)
+        print(f"completed={summary['completed']} "
+              f"expired={summary['expired']} rejected={summary['rejected']} "
+              f"({summary['tokens']} tokens, {summary['wall_s']:.2f}s wall, "
+              f"{sched.steps_dispatched} chunk dispatches)")
+        print(f"TTFT ms: p50={summary['p50_ttft_ms']:.1f} "
+              f"p90={summary['p90_ttft_ms']:.1f} "
+              f"p99={summary['p99_ttft_ms']:.1f}")
+        print(f"TPOT ms: p50={summary['p50_tpot_ms']:.2f} "
+              f"p99={summary['p99_tpot_ms']:.2f}")
+        print(f"goodput: {summary['goodput_tps']:.1f} tok/s "
+              f"(total {summary['toks_per_s']:.1f} tok/s)")
+        return
 
     if args.continuous:
         # eng.model carries the delta/quant/mesh wiring applied by prepare;

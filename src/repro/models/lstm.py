@@ -474,7 +474,8 @@ class LSTMModel:
             return L.embed_apply(params["embed"], tokens[:, 0])
         return tokens[:, 0].astype(self.cfg.dtype)
 
-    def prefill(self, params, tokens, max_len: int, extra=None):
+    def prefill(self, params, tokens, max_len: int, extra=None,
+                length=None):
         """Process a full prompt, build the decode cache.
 
         Works on dense and SparsityPlan.pack'd params. With temporal
@@ -492,11 +493,19 @@ class LSTMModel:
             Cache capacity (contractual; the LSTM cache is O(1)).
         extra : Any, optional
             Unused by the LSTM (family conditioning slot).
+        length : int or (B,) int32, optional
+            True prompt length(s) when ``tokens`` is right-padded to a
+            bucket: steps at t ≥ length compute-and-discard (the carry is
+            frozen per sequence), so the returned cache and last-valid
+            logits are BITWISE what the unpadded prompt would produce.
+            This is the scheduler's bucketed-prefill hook — one compile
+            per padded width instead of one per distinct prompt length.
 
         Returns
         -------
         (logits, cache)
-            Last-position logits (B, 1, V) and the decode cache.
+            Logits at the last (valid) position (B, 1, V) and the decode
+            cache.
         """
         cfg = self.cfg
         if cfg.vocab_size:
@@ -504,26 +513,43 @@ class LSTMModel:
         else:
             x = tokens.astype(cfg.dtype)
         B = x.shape[0]
-        if self.delta is not None:
-            state = self.init_cache(B, max_len)["layers"]
+        delta = self.delta is not None
+        if delta:
+            state0 = tuple(self.init_cache(B, max_len)["layers"])
+            step_fn = lambda st, x_t: self._delta_step(params, x_t, list(st))
+        else:
+            state0 = tuple(self.init_state(B))
+            step_fn = lambda st, x_t: self._step(params, x_t, st)
 
-            def dstep(st, x_t):
-                h, st2 = self._delta_step(params, x_t, list(st))
-                return tuple(st2), h
+        # Exact (length=None) and bucketed prefill share ONE scan body:
+        # the select that freezes padded-out state changes XLA's fusion
+        # decisions inside the loop body at the ulp level, so a separate
+        # unmasked fast path would NOT be bitwise against the masked one.
+        # Running every prefill through the masked body makes padded+length
+        # reproduce the unpadded prefill exactly (same compiled body, the
+        # selects are all-keep no-ops below each sequence's length).
+        if length is None:
+            length = x.shape[1]
+        length = jnp.asarray(length, jnp.int32)
 
-            state, hs = jax.lax.scan(dstep, tuple(state),
-                                     x.transpose(1, 0, 2))
-            return self._head_logits(params, hs[-1]), {"layers": list(state)}
-        state = self.init_state(B)
+        def step(carry, xt):
+            st, h_last = carry
+            x_t, t = xt
+            h, st2 = step_fn(st, x_t)
+            keep = jnp.broadcast_to(t < length, (B,))
+            sel = lambda n, o: jnp.where(
+                keep.reshape((B,) + (1,) * (n.ndim - 1)), n, o)
+            st2 = jax.tree.map(sel, tuple(st2), st)
+            return (st2, jnp.where(keep[:, None], h, h_last)), None
 
-        def step(st, x_t):
-            h, st2 = self._step(params, x_t, st)
-            return tuple(st2), h
-
-        state, hs = jax.lax.scan(step, tuple(state), x.transpose(1, 0, 2))
-        logits = self._head_logits(params, hs[-1])
-        cache = {"layers": [{"c": c, "h": h} for c, h in state]}
-        return logits, cache
+        h0 = jnp.zeros((B, cfg.hidden), cfg.dtype)
+        (state, h_last), _ = jax.lax.scan(
+            step, (state0, h0),
+            (x.transpose(1, 0, 2), jnp.arange(x.shape[1])))
+        logits = self._head_logits(params, h_last)
+        if delta:
+            return logits, {"layers": list(state)}
+        return logits, {"layers": [{"c": c, "h": h} for c, h in state]}
 
     def decode_step(self, params, cache, tokens, pos):
         """One decode step over the cache.

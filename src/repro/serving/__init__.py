@@ -3,13 +3,18 @@
 - runtime   — the DecodeStep protocol + the scan-based decode_loop
 - sampling  — on-device greedy/temperature/top-k sampling with EOS
 - engine    — ServeEngine: sharded prefill + lockstep batched decode
-- scheduler — ContinuousBatchingEngine: slot-based request streaming
+- scheduler — ContinuousBatchingEngine: pooled-slot continuous batching
+              with dispatch-ahead, bucketed prefill, deadlines, and
+              per-token streaming (built on repro.traffic)
 """
 from .engine import ServeEngine, cache_shardings
-from .runtime import DecodeStep, conforms, decode_loop
+from .runtime import (DecodeStep, conforms, decode_loop,
+                      prefill_accepts_length)
 from .sampling import SamplingConfig, sample
-from .scheduler import ContinuousBatchingEngine, Request, Finished
+from .scheduler import (ContinuousBatchingEngine, Request, Finished,
+                        TokenEvent)
 
 __all__ = ["ServeEngine", "cache_shardings", "DecodeStep", "conforms",
-           "decode_loop", "SamplingConfig", "sample",
-           "ContinuousBatchingEngine", "Request", "Finished"]
+           "decode_loop", "prefill_accepts_length", "SamplingConfig",
+           "sample", "ContinuousBatchingEngine", "Request", "Finished",
+           "TokenEvent"]

@@ -172,7 +172,7 @@ class ServeEngine:
     def generate(self, params, tokens, steps: int, *, extra=None,
                  temperature: float = 0.0, top_k: int = 0, eos_id: int = -1,
                  rng=None, sampling: SamplingConfig | None = None,
-                 return_state: bool = False):
+                 return_state: bool = False, lengths=None):
         """Generate ``steps`` tokens for a lockstep batch of prompts.
 
         tokens (B, S) prompt; ``extra`` is family-specific conditioning
@@ -181,6 +181,14 @@ class ServeEngine:
         ``return_state=True`` additionally returns the decode_loop's final
         state dict (cache/logits/pos/...), e.g. to read the temporal-delta
         occupancy counters out of the cache after serving.
+
+        ``lengths`` (a (B,) int vector) serves a RAGGED batch in one
+        lockstep call: ``tokens`` is right-padded to a common width, the
+        model's length-aware prefill masks each sequence's padded tail
+        out of its state, and decode runs with per-sequence cache
+        positions. Requires a model whose prefill accepts ``length``
+        (``runtime.prefill_accepts_length``); each row's output is
+        bitwise what its unpadded batch=1 decode would produce (greedy).
         """
         if sampling is None:
             sampling = SamplingConfig(temperature=temperature, top_k=top_k,
@@ -193,9 +201,21 @@ class ServeEngine:
             # the tree structure) — O(1) sharding check
             from ..dist import check_partitioned
             check_partitioned(params, self.model.mesh)
-        logits, cache = self._prefill(params, tokens, max_len=self.max_len,
-                                      extra=extra)
-        pos = jnp.int32(tokens.shape[1])
+        if lengths is not None:
+            if not runtime.prefill_accepts_length(self.model):
+                raise TypeError(
+                    f"{type(self.model).__name__}.prefill has no "
+                    "length-masked path — ragged lockstep serving needs "
+                    "the `length` prefill parameter")
+            lengths = jnp.asarray(lengths, jnp.int32)
+            logits, cache = self._prefill(params, tokens,
+                                          max_len=self.max_len,
+                                          extra=extra, length=lengths)
+            pos = lengths
+        else:
+            logits, cache = self._prefill(params, tokens,
+                                          max_len=self.max_len, extra=extra)
+            pos = jnp.int32(tokens.shape[1])
         toks, state = self._loop(steps, sampling)(params, cache, logits,
                                                   pos, rng)
         return (toks, state) if return_state else toks

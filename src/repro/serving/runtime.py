@@ -26,6 +26,7 @@ call, zero per-token host syncs.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Any, Protocol, runtime_checkable
 
 import jax
@@ -33,7 +34,8 @@ import jax.numpy as jnp
 
 from .sampling import SamplingConfig, sample
 
-__all__ = ["DecodeStep", "conforms", "decode_loop"]
+__all__ = ["DecodeStep", "conforms", "decode_loop",
+           "prefill_accepts_length"]
 
 
 @runtime_checkable
@@ -54,7 +56,13 @@ class DecodeStep(Protocol):
         Process a full prompt. ``tokens``: (B, S) ids or (B, S, X)
         frames; ``extra`` is family-specific conditioning (VLM patch
         embeds, enc-dec encoder frames). Returns (last logits (B, 1, V),
-        cache).
+        cache). A family MAY additionally accept ``length`` (an int or
+        (B,) int32 vector of true prompt lengths ≤ S): tokens at
+        positions ≥ length are padding and must not perturb the
+        returned state — the scheduler then pads ragged prompts to
+        power-of-two buckets so prefill compiles once per bucket
+        instead of once per distinct length
+        (``prefill_accepts_length`` probes for the parameter).
     decode_step(params, cache, tokens, pos)
         Advance one token. ``tokens``: (B, 1); ``pos`` is a scalar next
         cache position (lockstep batch) or a (B,) int32 vector of
@@ -74,6 +82,15 @@ class DecodeStep(Protocol):
 def conforms(model) -> bool:
     """Whether ``model`` implements the DecodeStep serving contract."""
     return isinstance(model, DecodeStep)
+
+
+def prefill_accepts_length(model) -> bool:
+    """Whether ``model.prefill`` takes the optional ``length`` argument
+    (padding-masked bucketed prefill — see the DecodeStep docstring)."""
+    try:
+        return "length" in inspect.signature(model.prefill).parameters
+    except (TypeError, ValueError):
+        return False
 
 
 def decode_loop(model, params, cache, logits, pos, rng, steps: int,

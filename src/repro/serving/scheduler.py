@@ -1,27 +1,43 @@
-"""Slot-based continuous batching over the DecodeStep contract.
+"""Continuous batching over the DecodeStep contract, built for traffic.
 
-ESE/Spartus-style request-level serving: instead of one lockstep batch that
-lives and dies together, the scheduler owns a fixed number of decode
-*slots* over one shared cache. Requests with ragged prompt lengths and
-ragged generation budgets stream through:
+ESE/Spartus-style request-level serving, rebuilt around `repro.traffic`:
+the scheduler owns a preallocated pool of decode *slots* over one shared
+cache (`traffic.pool.SlotPool` — recurrent O(1) state makes hundreds of
+slots cheap), a priority/deadline admission queue with overload shedding
+(`traffic.admission.AdmissionQueue`), and a dispatch-ahead chunk pipeline
+(`traffic.dispatch.DispatchQueue`):
 
-  submit → queue → (slot free?) prefill the prompt at batch=1 →
-  join: write the prefilled cache/logits into the shared cache at the slot
-  → decode: all active slots step together in one on-device scan chunk
-  (per-slot cache positions — runtime.decode_loop with ``pos`` as a vector)
-  → evict: finished slots (EOS / budget / cache full) release and the next
-  queued request is admitted.
+  submit → admission queue → (slots free?) bucketed/batched prefill →
+  join: the prefilled cache rows, last logits, positions, done flags and
+  token budgets are scattered into the shared device state at the slots →
+  decode: all slots step together in on-device scan chunks; ``done`` and
+  ``budget`` live ON DEVICE and chain across chunks, so chunk N+1 can be
+  dispatched before chunk N's tokens ever reach the host →
+  harvest: the oldest in-flight chunk's tokens sync (the one host round
+  trip), stream out through per-token callbacks/events, and finished or
+  past-deadline slots are evicted back to the pool.
 
-The host syncs once per decode *chunk* (default 8 tokens), not per token;
-admission/eviction decisions ride on that boundary. Prefill is jitted per
-distinct prompt length (bucket prompts upstream if lengths are adversarial).
+With ``dispatch_depth`` ≥ 2 (the default) the host enqueues the next
+chunk — admissions included — while the device runs the current one
+(donated-buffer double buffering), the TPU analogue of the paper's
+computation overlapping. Depth 1 reproduces the synchronous
+chunk-per-sync baseline; both schedules decode every request
+bit-identically under greedy sampling (the device-resident done/budget
+vectors freeze finished slots regardless of when the host notices).
+
+Prefill compiles once per power-of-two length bucket, not once per
+distinct prompt length: prompts are right-padded to the bucket and the
+model's ``length=``-aware prefill masks the padded tail out of the state
+(bitwise-exact; models without a ``length`` parameter fall back to
+exact-length prefill). Same-bucket requests prefill together in one
+batched call (``prefill_batch``).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from collections import deque
-from typing import Any
+import inspect
+import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -29,8 +45,10 @@ import numpy as np
 
 from . import runtime
 from .sampling import SamplingConfig
+from ..traffic import (AdmissionQueue, DispatchQueue, QueuedRequest,
+                       SlotInfo, SlotPool)
 
-__all__ = ["Request", "Finished", "ContinuousBatchingEngine"]
+__all__ = ["Request", "Finished", "TokenEvent", "ContinuousBatchingEngine"]
 
 
 @dataclasses.dataclass
@@ -39,6 +57,8 @@ class Request:
     prompt: Any                 # (1, S) int32 tokens
     max_new: int
     extra: Any = None           # family-specific conditioning (frames, ...)
+    deadline: float | None = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -46,27 +66,65 @@ class Finished:
     uid: int
     tokens: np.ndarray          # emitted ids, EOS included if hit
     prompt_len: int
+    reason: str = "done"        # done | expired | rejected
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """Incremental output: tokens harvested for ``uid`` this chunk."""
+    uid: int
+    tokens: list
+    first: bool                 # True on the request's first emitted tokens
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two ≥ n, capped at ``cap``."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, cap)
 
 
 class ContinuousBatchingEngine:
     """Continuous batching for any DecodeStep model.
 
     ``params`` may be dense, pruned, or SparsityPlan.pack'd — the model's
-    decode_step dispatches (the BRDS LSTM runs rb_dual_spmv + lstm_gates on
-    packed params).
+    decode_step dispatches (the BRDS LSTM runs rb_dual_spmv + lstm_gates
+    on packed params).
 
     ``mesh`` turns on sharded serving (repro.dist): the slot batch runs
-    data-parallel over the mesh's ``data`` axis (when it divides the slot
-    count; batch=1 prefills replicate) with model-parallel row shards
-    inside each replica group. ``params`` must then be
-    ``repro.dist.partition_lstm_params``' layout — ``ServeEngine.prepare``
-    with the same mesh produces it (and a model already carrying the mesh,
-    in which case ``mesh=`` here is redundant but harmless).
+    data-parallel over the mesh's ``data`` axis with model-parallel row
+    shards inside each replica group; ``params`` must then be
+    ``repro.dist.partition_lstm_params``' layout.
+
+    Traffic controls (all keyword-only):
+
+    - ``slots``: pool size. Recurrent models keep O(1) state per slot, so
+      hundreds are cheap.
+    - ``dispatch_depth``: in-flight decode chunks (1 = synchronous
+      baseline, 2 = dispatch-ahead double buffering, the default).
+    - ``prefill_batch``: same-bucket admissions prefilled per call.
+      Keep 1 when serving uncalibrated q8 params (their dynamic max-abs
+      fallback reduces over the prefill batch; calibrated plans — the
+      real serving path — are exact at any batch).
+    - ``bucket_prompts``: pad prompts to power-of-two buckets when the
+      model's prefill is ``length``-aware (one compile per bucket).
+    - ``max_queue``: bound the admission queue; overload sheds the worst
+      waiting request (reason ``"rejected"``) instead of queueing
+      unboundedly.
+    - ``clock``: time source for deadlines/admission (default
+      ``time.perf_counter``; tests inject virtual clocks).
+    - ``on_token``: per-token streaming callback
+      ``(uid, tokens: list[int], first: bool)`` invoked at harvest.
     """
 
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
                  sampling: SamplingConfig = SamplingConfig(),
-                 chunk: int = 8, seed: int = 0, mesh=None):
+                 chunk: int = 8, seed: int = 0, mesh=None,
+                 dispatch_depth: int = 2, prefill_batch: int = 1,
+                 bucket_prompts: bool = True, max_queue: int | None = None,
+                 clock: Callable[[], float] | None = None,
+                 on_token: Callable[[int, list, bool], None] | None = None):
         if not runtime.conforms(model):
             raise TypeError(
                 f"{type(model).__name__} does not implement the DecodeStep "
@@ -88,7 +146,13 @@ class ContinuousBatchingEngine:
         self.max_len = max_len
         self.sampling = sampling
         self.chunk = chunk
+        self.prefill_batch = max(1, prefill_batch)
+        self.bucket_prompts = bucket_prompts
+        self.on_token = on_token
+        self._clock = clock or time.perf_counter
+        self._length_aware = runtime.prefill_accepts_length(model)
 
+        # ----- device-resident shared state (chained across dispatches)
         self.cache = model.init_cache(slots, max_len)
         # per-leaf batch axis: cache leaves may be layer-stacked (scanned
         # blocks put 'layers' ahead of 'batch'), so the slot join can't
@@ -100,45 +164,65 @@ class ContinuousBatchingEngine:
         self.pos = jnp.zeros((slots,), jnp.int32)
         self.logits = None                      # (slots, 1, V), lazy init
         self.rng = jax.random.key(seed)
+        self.done = jnp.ones((slots,), bool)    # idle slots sit done
+        self.budget = jnp.zeros((slots,), jnp.int32)
 
-        self._queue: deque[Request] = deque()
-        self._slot_uid: list[int | None] = [None] * slots
-        self._slot_prompt_len = [0] * slots
+        # ----- host-side traffic machinery
+        self.pool = SlotPool(slots)
+        self._aq = AdmissionQueue(max_queue)
+        self._dq = DispatchQueue(dispatch_depth)
+        self._live: dict[int, SlotInfo] = {}    # uid → seated record
+        self._collected: dict[int, list[int]] = {}
+        self._drops: list[Finished] = []        # shed at submit time
+        self._next_uid = 0
+        self.steps_dispatched = 0               # device dispatches (chunks)
         # steps the current occupant's cache has accumulated (prefill +
         # chunk decodes) — the divisor for per-slot occupancy accounting
         self.slot_steps = np.zeros(slots, np.int64)
-        self._remaining = np.zeros(slots, np.int64)
-        self._collected: dict[int, list[int]] = {}
-        self._next_uid = 0
-        self.steps_dispatched = 0               # device dispatches (chunks)
 
         self._prefill = jax.jit(model.prefill, static_argnames=("max_len",))
-        self._join = jax.jit(self._join_impl, donate_argnums=(0, 1, 2))
+        self._join = jax.jit(self._join_impl, donate_argnums=(0, 1, 2, 3, 4))
         self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._evict_fn = jax.jit(
+            lambda done, s: done.at[s].set(True), donate_argnums=(0,))
 
     # ------------------------------------------------------------- device
-    def _join_impl(self, cache, logits, pos, pre_cache, pre_logits, slot,
-                   prompt_len):
-        """Write a batch=1 prefill result into shared state at ``slot``."""
+    def _join_impl(self, cache, logits, pos, done, budget, pre_cache,
+                   pre_logits, slots_v, lengths_v, budgets_v):
+        """Scatter a batch of prefill results into the shared state at
+        ``slots_v`` and arm those slots (done=False, fresh budget)."""
         def upd(c, p, ax):
-            starts = tuple(slot if i == ax else 0 for i in range(c.ndim))
-            return jax.lax.dynamic_update_slice(c, p.astype(c.dtype), starts)
+            cm = jnp.moveaxis(c, ax, 0)
+            pm = jnp.moveaxis(p.astype(c.dtype), ax, 0)
+            return jnp.moveaxis(cm.at[slots_v].set(pm), 0, ax)
 
         cache = jax.tree.map(upd, cache, pre_cache, self._batch_axes)
-        logits = jax.lax.dynamic_update_index_in_dim(
-            logits, pre_logits[0].astype(logits.dtype), slot, 0)
-        pos = pos.at[slot].set(prompt_len)
-        return cache, logits, pos
+        logits = logits.at[slots_v].set(pre_logits.astype(logits.dtype))
+        pos = pos.at[slots_v].set(lengths_v)
+        done = done.at[slots_v].set(False)
+        budget = budget.at[slots_v].set(budgets_v)
+        return cache, logits, pos, done, budget
 
     def _chunk_impl(self, params, cache, logits, pos, rng, done, budget):
-        return runtime.decode_loop(
+        toks, st = runtime.decode_loop(
             self.model, params, cache, logits, pos, rng, self.chunk,
             self.sampling, done=done, budget=budget, limit=self.max_len)
+        # budget lives on device so the next chunk can dispatch before
+        # this one's tokens reach the host
+        st["budget"] = jnp.maximum(budget - st["emitted"], 0)
+        return toks, st
 
     # -------------------------------------------------------------- admit
-    def submit(self, prompt, max_new: int, extra=None) -> int:
-        """Queue one request. prompt: (S,) or (1, S) int tokens."""
-        prompt = jnp.asarray(prompt, jnp.int32)
+    def submit(self, prompt, max_new: int, extra=None, *,
+               deadline: float | None = None, priority: int = 0) -> int:
+        """Queue one request. prompt: (S,) or (1, S) int tokens.
+
+        ``deadline`` is an absolute clock() time — past-deadline requests
+        are shed from the queue and evicted from slots; ``priority``
+        orders admission (higher first). Overload (a full ``max_queue``)
+        sheds the worst waiting request with reason ``"rejected"``.
+        """
+        prompt = np.asarray(prompt, np.int32)
         if prompt.ndim == 1:
             prompt = prompt[None, :]
         if prompt.shape[1] >= self.max_len:
@@ -146,81 +230,195 @@ class ContinuousBatchingEngine:
                              f"{self.max_len}")
         uid = self._next_uid
         self._next_uid += 1
-        self._queue.append(Request(uid, prompt, max_new, extra))
-        self._collected[uid] = []
+        shed = self._aq.push(QueuedRequest(
+            uid, prompt, prompt.shape[1], max_new, extra, deadline,
+            priority, self._clock()))
+        if shed is not None:
+            self._drops.append(Finished(shed.uid, np.zeros(0, np.int32),
+                                        shed.prompt_len, "rejected"))
         return uid
 
     @property
     def active_slots(self) -> list[int]:
-        return [s for s, u in enumerate(self._slot_uid) if u is not None]
+        return self.pool.active()
+
+    @property
+    def _slot_uid(self) -> list[int | None]:
+        return self.pool.owners()
 
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._aq)
 
-    def _admit(self):
-        for slot in range(self.slots):
-            if self._slot_uid[slot] is not None or not self._queue:
-                continue
-            req = self._queue.popleft()
-            plen = req.prompt.shape[1]
-            lp, pre_cache = self._prefill(self.params, req.prompt,
-                                          max_len=self.max_len,
-                                          extra=req.extra)
-            if self.logits is None:
-                self.logits = jnp.zeros((self.slots,) + lp.shape[1:],
-                                        lp.dtype)
-            self.cache, self.logits, self.pos = self._join(
-                self.cache, self.logits, self.pos, pre_cache, lp,
-                jnp.int32(slot), jnp.int32(plen))
-            self._slot_uid[slot] = req.uid
-            self._slot_prompt_len[slot] = plen
-            self.slot_steps[slot] = plen    # join resets the slot's cache
-            # cap the budget at the cache capacity left after the prompt
-            self._remaining[slot] = min(req.max_new, self.max_len - plen)
+    @property
+    def busy(self) -> bool:
+        """Whether step() still has work (queued, decoding, in flight, or
+        undelivered shed notices)."""
+        return bool(self._aq or self._live or self._dq or self._drops)
 
-    # -------------------------------------------------------------- decode
-    def step(self) -> list[Finished]:
-        """Admit queued requests, decode one chunk, evict finished slots.
-        Returns the requests that completed this step."""
-        self._admit()
-        active = self.active_slots
-        if not active:
-            return []
-        done0 = jnp.asarray(
-            [u is None for u in self._slot_uid], bool)
-        budget = jnp.asarray(np.maximum(self._remaining, 0), jnp.int32)
+    def _admit(self, now: float) -> list[Finished]:
+        """Admit queued requests into free slots: expire stale ones, group
+        by prefill bucket, prefill (batched where exact), join."""
+        events = [Finished(r.uid, np.zeros(0, np.int32), r.prompt_len,
+                           "expired") for r in self._aq.expire(now)]
+        while self.pool.free_count and self._aq:
+            batch = self._aq.pop(min(self.pool.free_count,
+                                     self.prefill_batch))
+            for group in self._group(batch):
+                self._prefill_join(group, now)
+        return events
+
+    def _group(self, batch: list[QueuedRequest]):
+        """Split admitted requests into joint-prefill groups: same padded
+        bucket, no extra conditioning. Models without length-aware
+        prefill (or with bucketing off) prefill one by one at exact
+        length — batching would change their prefill numerics."""
+        if not (self._length_aware and self.bucket_prompts):
+            return [[r] for r in batch]
+        groups: dict[int, list] = {}
+        singles: list[list] = []
+        for r in batch:
+            if r.extra is not None:
+                singles.append([r])
+            else:
+                key = _bucket(r.prompt_len, self.max_len - 1)
+                groups.setdefault(key, []).append(r)
+        return list(groups.values()) + singles
+
+    def _prefill_join(self, group: list[QueuedRequest], now: float):
+        k = len(group)
+        lengths = [r.prompt_len for r in group]
+        budgets = [min(r.max_new, self.max_len - r.prompt_len)
+                   for r in group]
+        slots = self.pool.alloc_many(k)
+        assert len(slots) == k      # _admit popped at most free_count
+        if self._length_aware and self.bucket_prompts:
+            width = _bucket(max(lengths), self.max_len - 1)
+            padded = np.zeros((k, width), np.int32)
+            for i, r in enumerate(group):
+                padded[i, :r.prompt_len] = r.prompt[0]
+            lp, pre_cache = self._prefill(
+                self.params, jnp.asarray(padded), max_len=self.max_len,
+                extra=group[0].extra,
+                length=jnp.asarray(lengths, jnp.int32))
+        else:
+            lp, pre_cache = self._prefill(
+                self.params, jnp.asarray(group[0].prompt),
+                max_len=self.max_len, extra=group[0].extra)
+        if self.logits is None:
+            self.logits = jnp.zeros((self.slots,) + lp.shape[1:], lp.dtype)
+        self.cache, self.logits, self.pos, self.done, self.budget = \
+            self._join(self.cache, self.logits, self.pos, self.done,
+                       self.budget, pre_cache, lp,
+                       jnp.asarray(slots, jnp.int32),
+                       jnp.asarray(lengths, jnp.int32),
+                       jnp.asarray(budgets, jnp.int32))
+        for r, slot, budget in zip(group, slots, budgets):
+            info = SlotInfo(r.uid, r.prompt_len, budget, r.deadline,
+                            r.priority, admitted_at=now, extra=r.extra)
+            self.pool.seat(slot, info)
+            self._live[r.uid] = info
+            self._collected[r.uid] = []
+            self.slot_steps[slot] = r.prompt_len    # join reset the cache
+
+    # ------------------------------------------------------------- decode
+    def _dispatch(self):
+        """Enqueue one decode chunk on the chained device state. Returns
+        immediately — tokens are a future harvested later."""
+        owners = self.pool.owners()
         toks, st = self._chunk_fn(self.params, self.cache, self.logits,
-                                  self.pos, self.rng, done0, budget)
+                                  self.pos, self.rng, self.done, self.budget)
         self.cache, self.logits = st["cache"], st["logits"]
         self.pos, self.rng = st["pos"], st["rng"]
+        self.done, self.budget = st["done"], st["budget"]
         self.steps_dispatched += 1
         # every slot steps through decode_step each chunk (done slots
         # included — lockstep semantics), so all caches advance
         self.slot_steps += self.chunk
+        self._dq.push(toks, owners)
 
-        toks_np = np.asarray(toks)              # the one host sync per chunk
-        finished: list[Finished] = []
-        for slot in active:
-            uid = self._slot_uid[slot]
-            out = self._collected[uid]
+    def _harvest(self, now: float) -> list:
+        """Sync the oldest in-flight chunk's tokens and account them to
+        the requests that owned each slot at ITS dispatch time."""
+        inflight = self._dq.harvest()
+        if inflight is None:
+            return []
+        toks_np = np.asarray(inflight.tokens)   # the one host sync
+        events: list = []
+        evictions: list[int] = []
+        for slot, uid in enumerate(inflight.owners):
+            info = self._live.get(uid) if uid is not None else None
+            if info is None:        # idle, or finished before this sync
+                continue
+            fresh: list[int] = []
             for t in toks_np[slot]:
-                if self._remaining[slot] <= 0:
+                if info.remaining <= 0:
                     break
-                out.append(int(t))
-                self._remaining[slot] -= 1
-                if self.sampling.stops and int(t) == self.sampling.eos_id:
-                    self._remaining[slot] = 0
-            if self._remaining[slot] <= 0:
-                finished.append(Finished(uid, np.asarray(out, np.int32),
-                                         self._slot_prompt_len[slot]))
-                self._slot_uid[slot] = None     # evict: slot is reusable
-        return finished
+                t = int(t)
+                fresh.append(t)
+                info.remaining -= 1
+                info.emitted += 1
+                if self.sampling.stops and t == self.sampling.eos_id:
+                    info.remaining = 0
+            if fresh:
+                out = self._collected[uid]
+                first = not out
+                out.extend(fresh)
+                if self.on_token is not None:
+                    self.on_token(uid, fresh, first)
+                events.append(TokenEvent(uid, fresh, first))
+            if info.remaining <= 0:
+                events.append(self._finish(uid, "done"))
+            elif info.deadline is not None and now > info.deadline:
+                # past-deadline occupant: free the slot, freeze it on
+                # device so chunks dispatched from here on skip it
+                evictions.append(info.slot)
+                events.append(self._finish(uid, "expired"))
+        if evictions:
+            self.done = self._evict_fn(self.done,
+                                       jnp.asarray(evictions, jnp.int32))
+        return events
+
+    def _finish(self, uid: int, reason: str) -> Finished:
+        info = self._live.pop(uid)
+        self.pool.free(info.slot)
+        toks = np.asarray(self._collected.pop(uid), np.int32)
+        return Finished(uid, toks, info.prompt_len, reason)
+
+    # -------------------------------------------------------------- drive
+    def _step_events(self) -> list:
+        """One scheduler iteration: deliver shed notices, admit, keep the
+        dispatch pipeline full, harvest the oldest chunk. Returns the
+        step's TokenEvent/Finished stream."""
+        events: list = self._drops
+        self._drops = []
+        events += self._admit(self._clock())
+        if self._live:
+            while self._dq.want_dispatch:
+                self._dispatch()
+        if self._dq:
+            events += self._harvest(self._clock())
+        return events
+
+    def step(self) -> list[Finished]:
+        """Admit, decode one chunk, harvest, evict. Returns the requests
+        that completed (or were shed/expired) this step; per-token output
+        flows through ``on_token`` / ``events()``."""
+        return [e for e in self._step_events() if isinstance(e, Finished)]
+
+    def events(self):
+        """Incremental-results iterator: yields ``TokenEvent``s as chunks
+        are harvested and ``Finished`` as requests complete, until the
+        engine drains."""
+        while self.busy:
+            yield from self._step_events()
 
     def run(self) -> dict[int, np.ndarray]:
-        """Drive until queue and slots drain. Returns {uid: tokens}."""
+        """Drive until queue, slots, and the dispatch pipeline drain.
+        Returns {uid: tokens} (shed/expired requests included, with
+        whatever prefix they produced)."""
         results: dict[int, np.ndarray] = {}
-        while self._queue or self.active_slots:
-            for fin in self.step():
-                results[fin.uid] = fin.tokens
+        for ev in self.events():
+            if isinstance(ev, Finished):
+                results[ev.uid] = ev.tokens
         return results
