@@ -18,6 +18,12 @@ interpret mode measures Python, not hardware) across the serving matrix:
                              sets --xla_force_host_platform_device_count; the
                              numbers track Python/dispatch overhead of the
                              sharded path, not real interconnects)
+  packed × chained/fused   — the ISSUE-7 comparison: chained per-kernel
+                             decode vs the single-launch fused step, each
+                             with the HBM-roofline bound (B·HBM_BW /
+                             per-step packed bytes) and its roofline_gap
+  fused step vs scan       — kernel-level: T separate fused-step launches
+                             vs one in-kernel scan launch at T ∈ {1, 8, 32}
 """
 import os
 import subprocess
@@ -32,7 +38,8 @@ from repro.serving import (ServeEngine, ContinuousBatchingEngine,
                           SamplingConfig)
 from repro.sparse import (DeltaGateConfig, lstm_policy, occupancy_report,
                           use_backend)
-from .common import bench_lstm_cfg, bench_lstm_dims, row, time_fn as _time
+from .common import (bench_lstm_cfg, bench_lstm_dims, row, smoke,
+                     time_fn as _time)
 
 B, P, G = bench_lstm_dims()
 
@@ -43,7 +50,7 @@ def main():
     params = model.init(jax.random.key(0))
     plan = lstm_policy(0.875, 0.75, backend="ref").compile(params)
     pruned, masks = plan.prune(params)
-    packed, _ = plan.pack(pruned, masks)
+    packed, pack_report = plan.pack(pruned, masks)
     prompt = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
     eng = ServeEngine(model, cfg, max_len=P + G, batch=B)
 
@@ -111,7 +118,99 @@ def main():
         row("decode_packed_continuous", t / emitted * 1e6,
             f"toks_per_s={emitted / t:.0f} ragged_over_4_slots")
 
+    # ---- chained vs fused single-launch decode (ISSUE 7), on the Pallas
+    # kernels (the ref twins are structurally identical between the two
+    # paths — only the kernel datapath exposes the launch difference:
+    # 2 pallas_calls per layer-step chained vs 1 fused). Each row carries
+    # its distance from the HBM roofline: every decoded token streams all
+    # packed weight bytes, so the bound is B·BW/bytes. Longer decode +
+    # more iters than the rows above keep per-launch overhead above the
+    # wall-clock noise of a shared CPU host.
+    from repro import hw
+    bound = B * hw.HBM_BW / pack_report["packed_bytes"]
+    G2 = 4 * G
+    toks2 = B * G2
+    ceng = ServeEngine(model.with_fused(False), cfg, max_len=P + G2,
+                       batch=B)
+    feng = ServeEngine(model.with_fused(True), cfg, max_len=P + G2,
+                       batch=B)
+    run_c = lambda: ceng.generate(packed, prompt, G2)
+    run_f = lambda: feng.generate(packed, prompt, G2)
+    # interleaved sampling so a host-load drift between the two
+    # measurements cannot masquerade as a chained/fused difference
+    for r in (run_c, run_f):
+        jax.block_until_ready(r())
+        jax.block_until_ready(r())
+    cs, fs = [], []
+    for _ in range(9):
+        for r, ts in ((run_c, cs), (run_f, fs)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(r())
+            ts.append(time.perf_counter() - t0)
+    t_c = sorted(cs)[len(cs) // 2]
+    t_f = sorted(fs)[len(fs) // 2]
+    row("decode_packed_chained_lockstep", t_c / toks2 * 1e6,
+        f"toks_per_s={toks2 / t_c:.0f} "
+        f"roofline_bound_toks_per_s={bound:.0f} "
+        f"roofline_gap={bound / (toks2 / t_c):.1f}x")
+    row("decode_packed_fused_lockstep", t_f / toks2 * 1e6,
+        f"toks_per_s={toks2 / t_f:.0f} "
+        f"roofline_bound_toks_per_s={bound:.0f} "
+        f"roofline_gap={bound / (toks2 / t_f):.1f}x "
+        f"speedup_vs_chained={t_c / t_f:.2f}x")
+
+    _fused_kernel_rows()
     _sharded_rows()
+
+
+# ------------------------------------------------- fused step vs scan rows
+# Kernel-level launch-amortisation curve: T separate fused-step calls vs
+# ONE fused_brds_lstm_scan launch covering the same T tokens. The scan
+# keeps (c, h) in VMEM scratch across the token axis; its rows carry a
+# weights_fit_vmem flag (both packed families within a 16 MiB working
+# budget — the regime where the single launch also never re-reads weights
+# from HBM between tokens).
+
+def _fused_kernel_rows():
+    from repro import hw
+    from repro.core.packing import pack
+    from repro.core.sparsity import row_balanced_mask
+    from repro.kernels import fused_brds_lstm_step, fused_brds_lstm_scan
+
+    cfg = bench_lstm_cfg()
+    X, H = cfg.input_size, cfg.hidden
+    R = 4 * H
+    kx, kh, kb, ks, kc, kh0 = jax.random.split(jax.random.key(2), 6)
+    wx = jax.random.normal(kx, (R, X), jnp.float32)
+    wh = jax.random.normal(kh, (R, H), jnp.float32)
+    sx = pack(wx, row_balanced_mask(wx, 0.875))
+    sh = pack(wh, row_balanced_mask(wh, 0.75))
+    bias = jax.random.normal(kb, (R,), jnp.float32)
+    wbytes = sum(int(x.nbytes) for x in jax.tree.leaves((sx, sh)))
+    fits = int(wbytes <= 16 * 2 ** 20)
+    h0 = jax.random.normal(kh0, (B, H), jnp.float32)
+    c0 = jax.random.normal(kc, (B, H), jnp.float32)
+    # Pallas path on purpose (interpret on CPU): one pallas_call for the
+    # whole scan vs T step launches is the structural difference being
+    # measured; the ref twins of step and scan are the same eager ops.
+    for T in smoke((1, 8), (1, 8, 32)):
+        xs = jax.random.normal(ks, (T, B, X), jnp.float32)
+
+        def steps():
+            c, h = c0, h0
+            for t in range(T):
+                c, h = fused_brds_lstm_step(sx, xs[t], sh, h, bias, c)
+            return h
+
+        t_s = _time(steps)
+        row(f"fused_step_T{T}", t_s / (B * T) * 1e6,
+            f"toks_per_s={B * T / t_s:.0f} launches={T}")
+        t_c = _time(
+            lambda: fused_brds_lstm_scan(sx, xs, sh, h0, bias, c0))
+        row(f"fused_scan_T{T}", t_c / (B * T) * 1e6,
+            f"toks_per_s={B * T / t_c:.0f} launches=1 "
+            f"weights_fit_vmem={fits} "
+            f"speedup_vs_steps={t_s / t_c:.2f}x")
 
 
 # ------------------------------------------------------------- sharded rows

@@ -12,6 +12,14 @@ the records downstream tooling reads:
       (the dispatch-ahead comparison), each with toks_per_s; the ahead
       row carries the speedup column
 
+  BENCH_decode_throughput.json
+    - the chained-vs-fused pair (decode_packed_chained_lockstep /
+      decode_packed_fused_lockstep), each with toks_per_s,
+      roofline_bound_toks_per_s and the roofline_gap column; the fused
+      row carries speedup_vs_chained
+    - ≥1 fused_step_T* and ≥1 fused_scan_T* kernel row (the launch-
+      amortisation curve); every scan row carries weights_fit_vmem
+
   every BENCH_*.json
     - top-level benchmark/smoke/wall_time_s/rows keys, rows a list of
       dicts each with name + us_per_call
@@ -64,12 +72,35 @@ def check_traffic(path, payload):
         fail(f"{path}: traffic_steady_ahead missing speedup column")
 
 
+def check_decode(path, payload):
+    rows = {r["name"]: r for r in payload["rows"]}
+    for name in ("decode_packed_chained_lockstep",
+                 "decode_packed_fused_lockstep"):
+        if name not in rows:
+            fail(f"{path}: missing {name} row")
+        for k in ("toks_per_s", "roofline_bound_toks_per_s",
+                  "roofline_gap"):
+            if k not in rows[name]:
+                fail(f"{path}: {name} missing {k!r}")
+    if "speedup_vs_chained" not in rows["decode_packed_fused_lockstep"]:
+        fail(f"{path}: decode_packed_fused_lockstep missing "
+             "speedup_vs_chained column")
+    steps = [n for n in rows if n.startswith("fused_step_T")]
+    scans = [n for n in rows if n.startswith("fused_scan_T")]
+    if not steps or not scans:
+        fail(f"{path}: launch-amortisation curve needs fused_step_T* and "
+             f"fused_scan_T* rows (got {len(steps)}/{len(scans)})")
+    for n in scans:
+        if "weights_fit_vmem" not in rows[n]:
+            fail(f"{path}: {n} missing weights_fit_vmem flag")
+
+
 def main():
     out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
     if not paths:
         fail(f"no BENCH_*.json found in {out_dir!r}")
-    saw_traffic = False
+    saw_traffic = saw_decode = False
     for path in paths:
         with open(path) as f:
             payload = json.load(f)
@@ -77,11 +108,17 @@ def main():
         if payload["benchmark"] == "traffic":
             check_traffic(path, payload)
             saw_traffic = True
+        if payload["benchmark"] == "decode_throughput":
+            check_decode(path, payload)
+            saw_decode = True
     if not saw_traffic:
         fail("BENCH_traffic.json not produced (traffic module not "
              "registered in benchmarks/run.py?)")
-    print(f"check_bench_schema: OK ({len(paths)} files, traffic schema "
-          "verified)")
+    if not saw_decode:
+        fail("BENCH_decode_throughput.json not produced (decode module "
+             "not registered in benchmarks/run.py?)")
+    print(f"check_bench_schema: OK ({len(paths)} files, traffic + decode "
+          "schemas verified)")
 
 
 if __name__ == "__main__":

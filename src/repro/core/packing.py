@@ -21,7 +21,8 @@ import numpy as np
 
 from .sparsity import row_balanced_mask, keep_count
 
-__all__ = ["RowBalancedSparse", "pack", "unpack", "pack_from_dense"]
+__all__ = ["RowBalancedSparse", "pack", "unpack", "pack_from_dense",
+           "pad_packed"]
 
 
 @jax.tree_util.register_dataclass
@@ -33,15 +34,30 @@ class RowBalancedSparse:
     deltas:  (rows, K)  delta-encoded column indices (delta_dtype);
                         col[r, 0] = deltas[r, 0]; col[r, j] = col[r, j-1] + deltas[r, j]
     ncols:   static logical column count
+    pad:     static count of zero rows appended by ``pad_packed`` so the
+             row axis is a kernel-block multiple; ``rows`` stays logical
+    block_rows: static block size the padding targeted (None = unpadded)
     """
 
     values: jnp.ndarray
     deltas: jnp.ndarray
     ncols: int = dataclasses.field(metadata=dict(static=True))
+    pad: int = dataclasses.field(default=0, metadata=dict(static=True))
+    block_rows: int | None = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def rows(self) -> int:
-        return self.values.shape[0]
+        return self.values.shape[0] - self.pad
+
+    def logical(self) -> "RowBalancedSparse":
+        """Padding-free view (slices off ``pad_packed``'s zero rows)."""
+        if not self.pad:
+            return self
+        r = self.rows
+        return dataclasses.replace(self, values=self.values[:r],
+                                   deltas=self.deltas[:r], pad=0,
+                                   block_rows=None)
 
     @property
     def K(self) -> int:
@@ -56,9 +72,11 @@ class RowBalancedSparse:
         return jnp.cumsum(self.deltas.astype(jnp.int32), axis=1)
 
     def memory_bytes(self) -> dict:
-        """Storage accounting for the Table-1 analogue benchmark."""
-        v = self.values.size * self.values.dtype.itemsize
-        i = self.deltas.size * self.deltas.dtype.itemsize
+        """Storage accounting for the Table-1 analogue benchmark (logical
+        rows only — ``pad_packed``'s zero rows are a layout artifact)."""
+        n = self.rows * self.K
+        v = n * self.values.dtype.itemsize
+        i = n * self.deltas.dtype.itemsize
         dense = self.rows * self.ncols * self.values.dtype.itemsize
         return dict(values=v, indices=i, total=v + i, dense_equiv=dense,
                     ratio=(v + i) / dense)
@@ -107,8 +125,42 @@ def pack_from_dense(w: jnp.ndarray, sparsity: float) -> RowBalancedSparse:
 
 def unpack(s: RowBalancedSparse) -> jnp.ndarray:
     """Reconstruct the dense (rows, ncols) matrix (zeros where pruned)."""
+    s = s.logical()
     cols = s.col_indices()
     rows = s.rows
     out = jnp.zeros((rows, s.ncols), s.values.dtype)
     rowgrid = jnp.broadcast_to(jnp.arange(rows)[:, None], cols.shape)
     return out.at[rowgrid, cols].set(s.values)
+
+
+def pad_packed(s, block_rows: int = 256):
+    """Pre-pad a packed struct's row axis to a kernel-block multiple.
+
+    The kernel wrappers (``kernels.ops``) need the row count to be a
+    multiple of their grid block; historically they re-padded
+    values/deltas inside every jitted step call — a per-token copy of the
+    whole weight stream on the decode hot path. Padding once at
+    pack/prepare time (zero rows appended, ``pad``/``block_rows`` recorded
+    on the struct) lets the wrappers consume the arrays as-is.
+
+    Accepts :class:`RowBalancedSparse` and its quantized twin
+    (``repro.quant.RowBalancedSparseQ8`` — its per-row ``scales`` pad
+    along too). Padded rows are all-zero: their cumsum'd columns gather
+    x[:, 0] against zero values/scales, contributing exact zeros that the
+    wrappers slice away. No-op when the rows already divide ``block_rows``
+    or the struct is already padded for it.
+    """
+    r = s.rows
+    eff = min(block_rows, r) if r else block_rows
+    pad = (-r) % eff
+    if s.pad == pad and (s.block_rows in (None, eff) if pad == 0
+                         else s.block_rows == eff):
+        return dataclasses.replace(s, block_rows=eff)
+    s = s.logical()
+    widths = ((0, pad), (0, 0))
+    kw = dict(values=jnp.pad(s.values, widths),
+              deltas=jnp.pad(s.deltas, widths),
+              pad=pad, block_rows=eff)
+    if hasattr(s, "scales"):
+        kw["scales"] = jnp.pad(s.scales, (0, pad))
+    return dataclasses.replace(s, **kw)

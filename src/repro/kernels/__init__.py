@@ -12,6 +12,12 @@ from .ops import (
     delta_rb_dual_spmv,
     delta_rb_dual_spmv_q8,
     lstm_gates,
+    fused_brds_lstm_step,
+    fused_brds_delta_lstm_step,
+    fused_brds_lstm_step_q8,
+    fused_brds_delta_lstm_step_q8,
+    fused_brds_lstm_scan,
+    fused_brds_delta_lstm_scan,
     flash_attention,
     decode_attention,
     on_cpu,

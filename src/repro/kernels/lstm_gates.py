@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .ref import pwl_tables
 
@@ -38,7 +39,7 @@ def _pwl(x, a, b, lo, hi, n_seg, sat_lo, sat_hi):
 
 
 def _lstm_gates_kernel(lut_ref, zf_ref, zi_ref, zg_ref, zo_ref, c_ref,
-                       c_out_ref, h_out_ref, *, pwl: bool):
+                       c_out_ref, h_out_ref, p_scr, *, pwl: bool):
     f32 = jnp.float32
     zf, zi = zf_ref[...].astype(f32), zi_ref[...].astype(f32)
     zg, zo = zg_ref[...].astype(f32), zo_ref[...].astype(f32)
@@ -52,7 +53,14 @@ def _lstm_gates_kernel(lut_ref, zf_ref, zi_ref, zg_ref, zo_ref, c_ref,
         sig = jax.nn.sigmoid
         th = jnp.tanh
     f, i, g, o = sig(zf), sig(zi), th(zg), sig(zo)
-    c = f * c_prev + i * g
+    # c = f*c_prev + i*g, with each product staged through VMEM scratch:
+    # a stored product is exactly rounded and multi-use, so the compiler
+    # cannot contract it into the add (fmuladd) — the cell rounds the
+    # same way in every kernel that inlines this math (the fused
+    # single-step and multi-token-scan kernels replicate it bitwise)
+    p_scr[0] = f * c_prev
+    p_scr[1] = i * g
+    c = p_scr[0] + p_scr[1]
     h = o * th(c)
     c_out_ref[...] = c.astype(c_out_ref.dtype)
     h_out_ref[...] = h.astype(h_out_ref.dtype)
@@ -75,6 +83,7 @@ def lstm_gates(zf, zi, zg, zo, c_prev, *, pwl: bool = False,
         in_specs=[lut_spec] + [spec] * 5,
         out_specs=[spec, spec],
         out_shape=[jax.ShapeDtypeStruct((B, H), c_prev.dtype)] * 2,
+        scratch_shapes=[pltpu.VMEM((2, B, block), jnp.float32)],
         interpret=interpret,
     )(lut, zf, zi, zg, zo, c_prev)
     return c, h

@@ -4,8 +4,12 @@ Backend selection goes through ``repro.sparse.backend``: "pallas" runs the
 kernels (interpret mode on CPU, compiled on TPU), "ref" the pure-jnp
 reference formulations (the dry-run path lowers these; XLA fuses them),
 "auto"/None the configured default. The old per-call ``use_kernel=``
-boolean is accepted as a deprecated alias. Wrappers handle padding to
-block multiples.
+boolean is accepted as a deprecated alias.
+
+Row padding to kernel-block multiples is handled here, with a fast path
+for structs pre-padded by ``core.packing.pad_packed`` (the model/serving
+layer pads once at pack time so no per-token copy of the weight stream
+happens inside the jitted step).
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from . import fused_step as _fused
 from .rb_spmv import rb_spmv as _rb_spmv_kernel, rb_dual_spmv as _rb_dual_kernel
 from .delta_rb_spmv import (delta_rb_spmv as _delta_rb_spmv_kernel,
                             delta_rb_dual_spmv as _delta_rb_dual_kernel)
@@ -47,6 +52,43 @@ def _pad_rows(arr, mult):
     return arr, pad
 
 
+def _prep_rows(s, block_rows):
+    """→ (values, deltas, scales | None, eff_block, padded_rows).
+
+    The padded row count is a pure function of (logical rows, block):
+    ``Rp = R + (-R) % min(block_rows, R)`` — so the two structs of a dual
+    call always agree. Fast path: the struct was pre-padded to exactly
+    that count by ``core.packing.pad_packed`` (or needs no padding) and
+    its arrays are consumed as-is, no per-call copy. Otherwise fall back
+    to slicing to logical rows and padding here.
+    """
+    R = s.rows
+    eff = min(block_rows, R) if R else block_rows
+    Rp = R + (-R) % eff
+    scales = getattr(s, "scales", None)
+    if s.values.shape[0] == Rp:
+        return s.values, s.deltas, scales, eff, Rp
+    s = s.logical()
+    vals, _ = _pad_rows(s.values, eff)
+    deltas, _ = _pad_rows(s.deltas, eff)
+    scales = getattr(s, "scales", None)
+    if scales is not None and Rp > R:
+        scales = jnp.pad(scales, (0, Rp - R))
+    return vals, deltas, scales, eff, Rp
+
+
+def _fit(vec, n):
+    """Pad (with zeros) or slice ``vec``'s last axis to length ``n`` —
+    bias/partial-sum vectors ride whichever padding the struct carries."""
+    have = vec.shape[-1]
+    if have == n:
+        return vec
+    if have > n:
+        return vec[..., :n]
+    widths = ((0, 0),) * (vec.ndim - 1) + ((0, n - have),)
+    return jnp.pad(vec, widths)
+
+
 # ---------------------------------------------------------------- rb_spmv
 
 def rb_spmv(s: RowBalancedSparse, x: jnp.ndarray, *, block_rows: int = 256,
@@ -56,12 +98,9 @@ def rb_spmv(s: RowBalancedSparse, x: jnp.ndarray, *, block_rows: int = 256,
     if _resolve(backend, use_kernel) == "ref":
         return _ref.rb_spmv_ref(s, x)
     R = s.rows
-    block_rows = min(block_rows, R)
-    vals, padded = _pad_rows(s.values, block_rows)
-    deltas, _ = _pad_rows(s.deltas, block_rows)
-    y = _rb_spmv_kernel(vals, deltas, x, block_rows=block_rows,
-                        interpret=on_cpu())
-    return y[:, :R] if padded else y
+    vals, deltas, _, eff, Rp = _prep_rows(s, block_rows)
+    y = _rb_spmv_kernel(vals, deltas, x, block_rows=eff, interpret=on_cpu())
+    return y[:, :R] if Rp > R else y
 
 
 def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
@@ -71,15 +110,11 @@ def rb_dual_spmv(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h, bias,
     if _resolve(backend, use_kernel) == "ref":
         return _ref.rb_dual_spmv_ref(sx, x, sh, h, bias)
     R = sx.rows
-    block_rows = min(block_rows, R)
-    vx, padded = _pad_rows(sx.values, block_rows)
-    dx, _ = _pad_rows(sx.deltas, block_rows)
-    vh, _ = _pad_rows(sh.values, block_rows)
-    dh, _ = _pad_rows(sh.deltas, block_rows)
-    b = jnp.pad(bias, (0, vx.shape[0] - R)) if padded else bias
-    z = _rb_dual_kernel(vx, dx, x, vh, dh, h, b, block_rows=block_rows,
-                        interpret=on_cpu())
-    return z[:, :R] if padded else z
+    vx, dx, _, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dh, _, _, _ = _prep_rows(sh, block_rows)
+    z = _rb_dual_kernel(vx, dx, x, vh, dh, h, _fit(bias, Rp),
+                        block_rows=eff, interpret=on_cpu())
+    return z[:, :R] if Rp > R else z
 
 
 def delta_rb_spmv(s: RowBalancedSparse, d, fired, *, block_rows: int = 256,
@@ -92,12 +127,10 @@ def delta_rb_spmv(s: RowBalancedSparse, d, fired, *, block_rows: int = 256,
     if _resolve(backend, None) == "ref":
         return _ref.delta_rb_spmv_ref(s, d, fired)
     R = s.rows
-    block_rows = min(block_rows, R)
-    vals, padded = _pad_rows(s.values, block_rows)
-    deltas, _ = _pad_rows(s.deltas, block_rows)
-    y = _delta_rb_spmv_kernel(vals, deltas, d, fired, block_rows=block_rows,
+    vals, deltas, _, eff, Rp = _prep_rows(s, block_rows)
+    y = _delta_rb_spmv_kernel(vals, deltas, d, fired, block_rows=eff,
                               interpret=on_cpu())
-    return y[:, :R] if padded else y
+    return y[:, :R] if Rp > R else y
 
 
 def delta_rb_dual_spmv(sx: RowBalancedSparse, dx, fx,
@@ -110,15 +143,11 @@ def delta_rb_dual_spmv(sx: RowBalancedSparse, dx, fx,
     if _resolve(backend, None) == "ref":
         return _ref.delta_rb_dual_spmv_ref(sx, dx, fx, sh, dh, fh, m)
     R = sx.rows
-    block_rows = min(block_rows, R)
-    vx, padded = _pad_rows(sx.values, block_rows)
-    dxi, _ = _pad_rows(sx.deltas, block_rows)
-    vh, _ = _pad_rows(sh.values, block_rows)
-    dhi, _ = _pad_rows(sh.deltas, block_rows)
-    mp = jnp.pad(m, ((0, 0), (0, vx.shape[0] - R))) if padded else m
-    z = _delta_rb_dual_kernel(vx, dxi, dx, fx, vh, dhi, dh, fh, mp,
-                              block_rows=block_rows, interpret=on_cpu())
-    return z[:, :R] if padded else z
+    vx, dxi, _, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dhi, _, _, _ = _prep_rows(sh, block_rows)
+    z = _delta_rb_dual_kernel(vx, dxi, dx, fx, vh, dhi, dh, fh, _fit(m, Rp),
+                              block_rows=eff, interpret=on_cpu())
+    return z[:, :R] if Rp > R else z
 
 
 # --------------------------------------------------------------- quantized
@@ -147,35 +176,32 @@ def rb_spmv_q8(s, x, *, act_scale=None, block_rows: int = 256,
     if _resolve(backend, None) == "ref":
         return _ref.rb_spmv_q8_ref(s, qx, sa)
     R = s.rows
-    block_rows = min(block_rows, R)
-    vals, padded = _pad_rows(s.values, block_rows)
-    deltas, _ = _pad_rows(s.deltas, block_rows)
-    comb = (s.scales * sa).astype(jnp.float32)
-    if padded:
-        comb = jnp.pad(comb, (0, vals.shape[0] - R))
-    y = _rb_spmv_q8_kernel(vals, deltas, comb, qx, block_rows=block_rows,
+    vals, deltas, scales, eff, Rp = _prep_rows(s, block_rows)
+    comb = (scales * sa).astype(jnp.float32)
+    y = _rb_spmv_q8_kernel(vals, deltas, comb, qx, block_rows=eff,
                            interpret=on_cpu())
-    return y[:, :R] if padded else y
+    return y[:, :R] if Rp > R else y
+
+
+def _prep_parts_q8(sx, sax, sh, sah, block_rows):
+    """Prep both q8 families: padded arrays + combined (row × act) dequant
+    scales (padded scales are zero → padded rows dequantize to exact 0)."""
+    vx, dxi, scx, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dhi, sch, _, _ = _prep_rows(sh, block_rows)
+    cx = (scx * sax).astype(jnp.float32)
+    ch = (sch * sah).astype(jnp.float32)
+    return vx, dxi, cx, vh, dhi, ch, eff, Rp
 
 
 def _dual_parts_q8(sx, qx, sax, sh, qh, sah, block_rows):
-    """Run the two-family q8 kernel (padding to block multiples) →
-    (zx, zh) dequantized partial sums, both (B, rows) f32."""
+    """Run the two-family q8 kernel → (zx, zh) dequantized partial sums,
+    both (B, rows) f32."""
     R = sx.rows
-    block_rows = min(block_rows, R)
-    vx, padded = _pad_rows(sx.values, block_rows)
-    dxi, _ = _pad_rows(sx.deltas, block_rows)
-    vh, _ = _pad_rows(sh.values, block_rows)
-    dhi, _ = _pad_rows(sh.deltas, block_rows)
-    cx = (sx.scales * sax).astype(jnp.float32)
-    ch = (sh.scales * sah).astype(jnp.float32)
-    if padded:
-        pad = vx.shape[0] - R
-        cx, ch = jnp.pad(cx, (0, pad)), jnp.pad(ch, (0, pad))
+    vx, dxi, cx, vh, dhi, ch, eff, Rp = _prep_parts_q8(sx, sax, sh, sah,
+                                                       block_rows)
     zx, zh = _rb_dual_parts_q8_kernel(vx, dxi, cx, qx, vh, dhi, ch, qh,
-                                      block_rows=block_rows,
-                                      interpret=on_cpu())
-    return (zx[:, :R], zh[:, :R]) if padded else (zx, zh)
+                                      block_rows=eff, interpret=on_cpu())
+    return (zx[:, :R], zh[:, :R]) if Rp > R else (zx, zh)
 
 
 def rb_dual_spmv_q8(sx, x, sh, h, bias, *, act_scale_x=None,
@@ -189,7 +215,7 @@ def rb_dual_spmv_q8(sx, x, sh, h, bias, *, act_scale_x=None,
     if _resolve(backend, None) == "ref":
         return _ref.rb_dual_spmv_q8_ref(sx, qx, sax, sh, qh, sah, bias)
     zx, zh = _dual_parts_q8(sx, qx, sax, sh, qh, sah, block_rows)
-    return zx + zh + bias.astype(jnp.float32)[None, :]
+    return zx + zh + bias[:zx.shape[-1]].astype(jnp.float32)[None, :]
 
 
 def delta_rb_dual_spmv_q8(sx, dx, fx, sh, dh, fh, m, *, act_scale_x=None,
@@ -234,7 +260,7 @@ def brds_delta_lstm_step_q8(sx, dx, fx, sh, dh, fh, m_prev, bias, c_prev,
                               act_scale_x=act_scale_x,
                               act_scale_h=act_scale_h,
                               block_rows=block_rows, backend=backend)
-    z = m + bias.astype(jnp.float32)[None, :]
+    z = m + bias[:m.shape[-1]].astype(jnp.float32)[None, :]
     H = z.shape[-1] // 4
     c, h = lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
                       z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
@@ -253,7 +279,7 @@ def brds_delta_lstm_step(sx: RowBalancedSparse, dx, fx,
     (lstm_gates) produces the new cell state. Returns (c, h, m)."""
     m = delta_rb_dual_spmv(sx, dx, fx, sh, dh, fh, m_prev,
                            block_rows=block_rows, backend=backend)
-    z = m.astype(jnp.float32) + bias.astype(jnp.float32)[None, :]
+    z = m.astype(jnp.float32) + bias[:m.shape[-1]].astype(jnp.float32)[None, :]
     H = z.shape[-1] // 4
     c, h = lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
                       z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
@@ -269,12 +295,193 @@ def brds_lstm_step(sx: RowBalancedSparse, x, sh: RowBalancedSparse, h_prev,
     sx/sh packed over the 4H gate rows. Returns (c, h).
 
     This is the decode hot loop: the serving runtime scans it once per
-    generated token with the (c, h) cache donated."""
+    generated token with the (c, h) cache donated. Chained form — two
+    kernel launches (SpMV, gates) with z through HBM between them; see
+    ``fused_brds_lstm_step`` for the single-launch fusion."""
     z = rb_dual_spmv(sx, x, sh, h_prev, bias, block_rows=block_rows,
                      backend=backend)
     H = z.shape[-1] // 4
     return lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
                       z[:, 3 * H:], c_prev, pwl=pwl, backend=backend)
+
+
+# ------------------------------------------------------------- fused step
+
+def fused_brds_lstm_step(sx: RowBalancedSparse, x, sh: RowBalancedSparse,
+                         h_prev, bias, c_prev, *, pwl: bool = False,
+                         block_rows: int = 256, backend: str | None = None):
+    """``brds_lstm_step`` in ONE kernel launch: the Gate stage's z blocks
+    land in VMEM scratch and the Function stage closes the cell from
+    there — no HBM round-trip for z/c/h between the two. Bitwise-identical
+    to the chained path (same block shapes → same reductions). Returns
+    (c, h)."""
+    if _resolve(backend, None) == "ref":
+        z = _ref.rb_dual_spmv_ref(sx, x, sh, h_prev, bias)
+        H = z.shape[-1] // 4
+        return _ref.lstm_cell_ref(z[:, :H], z[:, H:2 * H],
+                                  z[:, 2 * H:3 * H], z[:, 3 * H:],
+                                  c_prev, pwl=pwl)
+    vx, dx, _, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dh, _, _, _ = _prep_rows(sh, block_rows)
+    return _fused.fused_brds_lstm_step(vx, dx, x, vh, dh, h_prev,
+                                       _fit(bias, Rp), c_prev, pwl=pwl,
+                                       block_rows=eff, interpret=on_cpu())
+
+
+def fused_brds_delta_lstm_step(sx: RowBalancedSparse, dx, fx,
+                               sh: RowBalancedSparse, dh, fh, m_prev, bias,
+                               c_prev, *, pwl: bool = False,
+                               block_rows: int = 256,
+                               backend: str | None = None):
+    """``brds_delta_lstm_step`` in ONE launch: fired-column masking, the
+    partial-sum memory update, bias and the cell — m and z VMEM-resident
+    between the stages. Returns (c, h, m)."""
+    fx = fx.astype(jnp.float32)
+    fh = fh.astype(jnp.float32)
+    if _resolve(backend, None) == "ref":
+        m = _ref.delta_rb_dual_spmv_ref(sx, dx, fx, sh, dh, fh, m_prev)
+        z = (m.astype(jnp.float32)
+             + bias[:m.shape[-1]].astype(jnp.float32)[None, :])
+        H = z.shape[-1] // 4
+        c, h = _ref.lstm_cell_ref(z[:, :H], z[:, H:2 * H],
+                                  z[:, 2 * H:3 * H], z[:, 3 * H:],
+                                  c_prev, pwl=pwl)
+        return c, h, m
+    R = sx.rows
+    vx, dxi, _, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dhi, _, _, _ = _prep_rows(sh, block_rows)
+    c, h, m = _fused.fused_brds_delta_lstm_step(
+        vx, dxi, dx, fx, vh, dhi, dh, fh, _fit(m_prev, Rp), _fit(bias, Rp),
+        c_prev, pwl=pwl, block_rows=eff, interpret=on_cpu())
+    return c, h, m[:, :R] if Rp > R else m
+
+
+def fused_brds_lstm_step_q8(sx, x, sh, h_prev, bias, c_prev, *,
+                            act_scale_x=None, act_scale_h=None,
+                            pwl: bool = False, block_rows: int = 256,
+                            backend: str | None = None):
+    """``brds_lstm_step_q8`` in ONE launch: int32 accumulate + per-row
+    dequant feeding the gate nonlinearities in-register. Returns (c, h)."""
+    qx, sax = _quant_act(x, sx, act_scale_x)
+    qh, sah = _quant_act(h_prev, sh, act_scale_h)
+    if _resolve(backend, None) == "ref":
+        z = _ref.rb_dual_spmv_q8_ref(sx, qx, sax, sh, qh, sah, bias)
+        H = z.shape[-1] // 4
+        return _ref.lstm_cell_ref(z[:, :H], z[:, H:2 * H],
+                                  z[:, 2 * H:3 * H], z[:, 3 * H:],
+                                  c_prev, pwl=pwl)
+    vx, dxi, cx, vh, dhi, ch, eff, Rp = _prep_parts_q8(sx, sax, sh, sah,
+                                                       block_rows)
+    return _fused.fused_brds_lstm_step_q8(vx, dxi, cx, qx, vh, dhi, ch, qh,
+                                          _fit(bias, Rp), c_prev, pwl=pwl,
+                                          block_rows=eff,
+                                          interpret=on_cpu())
+
+
+def fused_brds_delta_lstm_step_q8(sx, dx, fx, sh, dh, fh, m_prev, bias,
+                                  c_prev, *, act_scale_x=None,
+                                  act_scale_h=None, pwl: bool = False,
+                                  block_rows: int = 256,
+                                  backend: str | None = None):
+    """``brds_delta_lstm_step_q8`` in ONE launch: masked-delta int codes
+    advance the fp32 partial-sum memory, bias applies on top, the cell
+    closes — all VMEM-resident. Returns (c, h, m)."""
+    dxm = jnp.where(fx.astype(bool), dx, 0).astype(dx.dtype)
+    dhm = jnp.where(fh.astype(bool), dh, 0).astype(dh.dtype)
+    qdx, sax = _quant_act(dxm, sx, act_scale_x)
+    qdh, sah = _quant_act(dhm, sh, act_scale_h)
+    if _resolve(backend, None) == "ref":
+        m = _ref.delta_rb_dual_spmv_q8_ref(sx, qdx, sax, sh, qdh, sah,
+                                           m_prev)
+        z = m + bias[:m.shape[-1]].astype(jnp.float32)[None, :]
+        H = z.shape[-1] // 4
+        c, h = _ref.lstm_cell_ref(z[:, :H], z[:, H:2 * H],
+                                  z[:, 2 * H:3 * H], z[:, 3 * H:],
+                                  c_prev, pwl=pwl)
+        return c, h, m
+    R = sx.rows
+    vx, dxi, cx, vh, dhi, ch, eff, Rp = _prep_parts_q8(sx, sax, sh, sah,
+                                                       block_rows)
+    c, h, m = _fused.fused_brds_delta_lstm_step_q8(
+        vx, dxi, cx, qdx, vh, dhi, ch, qdh, _fit(m_prev, Rp),
+        _fit(bias, Rp), c_prev, pwl=pwl, block_rows=eff,
+        interpret=on_cpu())
+    return c, h, m[:, :R] if Rp > R else m
+
+
+# ------------------------------------------------------- multi-token scan
+
+def fused_brds_lstm_scan(sx: RowBalancedSparse, xs, sh: RowBalancedSparse,
+                         h0, bias, c0, *, pwl: bool = False,
+                         block_rows: int = 256,
+                         backend: str | None = None):
+    """T decode steps in ONE kernel launch. c/h stay in VMEM scratch
+    across tokens; only the packed weight blocks are re-read from HBM per
+    step (and can stay resident when they fit VMEM — see
+    ``benchmarks/decode_throughput.py``'s crossover report). Trajectory
+    is bitwise the T-times-repeated ``fused_brds_lstm_step``.
+
+    xs (T, B, X); h0/c0 (B, H). Returns (hs (T, B, H), c_T)."""
+    if _resolve(backend, None) == "ref":
+        # python loop, NOT lax.scan: a traced scan body compiles into one
+        # XLA computation whose fused mul+adds can contract (FMA) and
+        # drift off the eagerly-dispatched per-step oracle
+        c, h, hs = c0, h0, []
+        for t in range(xs.shape[0]):
+            z = _ref.rb_dual_spmv_ref(sx, xs[t], sh, h, bias)
+            H = z.shape[-1] // 4
+            c, h = _ref.lstm_cell_ref(z[:, :H], z[:, H:2 * H],
+                                      z[:, 2 * H:3 * H], z[:, 3 * H:],
+                                      c, pwl=pwl)
+            hs.append(h)
+        return jnp.stack(hs), c
+    vx, dx, _, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dh, _, _, _ = _prep_rows(sh, block_rows)
+    return _fused.fused_brds_lstm_scan(vx, dx, xs, vh, dh, h0,
+                                       _fit(bias, Rp), c0, pwl=pwl,
+                                       block_rows=eff, interpret=on_cpu())
+
+
+def fused_brds_delta_lstm_scan(sx: RowBalancedSparse, xs,
+                               sh: RowBalancedSparse, h0, c0, x_ref0,
+                               h_ref0, m0, bias, *, theta_x: float,
+                               theta_h: float, pwl: bool = False,
+                               block_rows: int = 256,
+                               backend: str | None = None):
+    """T temporally-sparse decode steps in ONE launch: thresholding,
+    reference tracking, the partial-sum memory AND the cell all advance
+    in VMEM scratch. Uncapped thresholds only (occupancy caps need
+    ``top_k`` — callers fall back to per-step launches when one is set).
+
+    xs (T, B, X); x_ref0/h_ref0 reference states; m0 (B, 4H) fp32 partial
+    sums. Returns (hs, c_T, x_ref_T, h_ref_T, m_T)."""
+    from ..sparse.temporal import delta_threshold
+    if _resolve(backend, None) == "ref":
+        # python loop, NOT lax.scan — see fused_brds_lstm_scan
+        c, h, xr, hr, m = c0, h0, x_ref0, h_ref0, m0
+        hs = []
+        for t in range(xs.shape[0]):
+            d_x, f_x, xr = delta_threshold(xs[t], xr, theta_x)
+            d_h, f_h, hr = delta_threshold(h, hr, theta_h)
+            m = _ref.delta_rb_dual_spmv_ref(
+                sx, d_x, f_x.astype(jnp.float32), sh, d_h,
+                f_h.astype(jnp.float32), m)
+            z = (m.astype(jnp.float32)
+                 + bias[:m.shape[-1]].astype(jnp.float32)[None, :])
+            H = z.shape[-1] // 4
+            c, h = _ref.lstm_cell_ref(z[:, :H], z[:, H:2 * H],
+                                      z[:, 2 * H:3 * H], z[:, 3 * H:],
+                                      c, pwl=pwl)
+            hs.append(h)
+        return jnp.stack(hs), c, xr, hr, m
+    R = sx.rows
+    vx, dxi, _, eff, Rp = _prep_rows(sx, block_rows)
+    vh, dhi, _, _, _ = _prep_rows(sh, block_rows)
+    hs, c, xr, hr, m = _fused.fused_brds_delta_lstm_scan(
+        vx, dxi, xs, vh, dhi, h0, c0, x_ref0, h_ref0, _fit(m0, Rp),
+        _fit(bias, Rp), theta_x=float(theta_x), theta_h=float(theta_h),
+        pwl=pwl, block_rows=eff, interpret=on_cpu())
+    return hs, c, xr, hr, m[:, :R] if Rp > R else m
 
 
 # ---------------------------------------------------------------- lstm cell
@@ -284,11 +491,22 @@ def lstm_gates(zf, zi, zg, zo, c_prev, *, pwl: bool = False,
     if _resolve(backend, use_kernel) == "ref":
         return _ref.lstm_cell_ref(zf, zi, zg, zo, c_prev, pwl=pwl)
     B, H = zf.shape
-    block = H
     for cand in (512, 256, 128, 64):
         if H % cand == 0:
             block = cand
             break
+    else:
+        if H > 64:
+            # odd hidden sizes: pad to the nearest 64-multiple and slice
+            # (the _pad_rows convention) instead of one giant block = H
+            Hp = -(-H // 64) * 64
+            w = ((0, 0), (0, Hp - H))
+            c, h = _lstm_gates_kernel(
+                jnp.pad(zf, w), jnp.pad(zi, w), jnp.pad(zg, w),
+                jnp.pad(zo, w), jnp.pad(c_prev, w), pwl=pwl, block=64,
+                interpret=on_cpu())
+            return c[:, :H], h[:, :H]
+        block = H
     return _lstm_gates_kernel(zf, zi, zg, zo, c_prev, pwl=pwl, block=block,
                               interpret=on_cpu())
 

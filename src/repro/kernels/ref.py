@@ -15,6 +15,7 @@ from ..core.packing import RowBalancedSparse
 
 def rb_spmv_ref(s: RowBalancedSparse, x: jnp.ndarray) -> jnp.ndarray:
     """y[b, r] = sum_k vals[r, k] * x[b, cols[r, k]].  x: (B, ncols)."""
+    s = s.logical()          # oracles compute logical rows only
     cols = s.col_indices()                                 # (R, K)
     g = jnp.take(x, cols, axis=1)                          # (B, R, K)
     return jnp.einsum("brk,rk->br", g.astype(jnp.float32),
@@ -32,7 +33,7 @@ def rb_dual_spmv_ref(sx: RowBalancedSparse, x: jnp.ndarray,
     z = (rb_spmv_ref(sx, x).astype(jnp.float32)
          + rb_spmv_ref(sh, h).astype(jnp.float32))
     if bias is not None:
-        z = z + bias.astype(jnp.float32)[None, :]
+        z = z + bias[:z.shape[-1]].astype(jnp.float32)[None, :]
     return z.astype(x.dtype)
 
 
@@ -79,6 +80,7 @@ def rb_spmv_q8_ref(s, qx: jnp.ndarray, act_scale) -> jnp.ndarray:
     ``(Σ_k codes · qx) · (row_scale · act_scale)``. The accumulation is
     exact integer arithmetic, so the Pallas kernel matches bit-for-bit.
     """
+    s = s.logical()          # oracles compute logical rows only
     cols = s.col_indices()                                  # (R, K)
     # keep the codes at their storage width into the dot (s8/s16 operands,
     # int32 accumulation via preferred_element_type): exact integer math,
@@ -95,8 +97,8 @@ def rb_dual_spmv_q8_ref(sx, qx, ax, sh, qh, ah,
     """Quantized dual-ratio gate preactivation oracle:
     z = dq(Sx@qx) + dq(Sh@qh) + bias, each family dequantized with its own
     combined (row × activation) scales. Returns (B, rows) float32."""
-    return (rb_spmv_q8_ref(sx, qx, ax) + rb_spmv_q8_ref(sh, qh, ah)
-            + bias.astype(jnp.float32)[None, :])
+    z = rb_spmv_q8_ref(sx, qx, ax) + rb_spmv_q8_ref(sh, qh, ah)
+    return z + bias[:z.shape[-1]].astype(jnp.float32)[None, :]
 
 
 def delta_rb_dual_spmv_q8_ref(sx, qdx, ax, sh, qdh, ah,

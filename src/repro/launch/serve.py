@@ -65,8 +65,8 @@ def _build(args):
             sparsity = lstm_policy(args.spar_a if args.brds else 0.0,
                                    args.spar_b if args.brds else 0.0,
                                    delta=delta, quant=quant)
-        return (LSTMModel(cfg), cfg, cfg.vocab_size, sparsity,
-                lambda rng, batch: None)
+        return (LSTMModel(cfg, fused=args.fused), cfg, cfg.vocab_size,
+                sparsity, lambda rng, batch: None)
 
     if args.delta is not None:
         raise SystemExit("--delta is LSTM-only (temporal sparsity rides "
@@ -126,6 +126,13 @@ def main():
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "pallas", "ref"),
                     help="sparse-kernel backend for packed decode")
+    ap.add_argument("--fused", dest="fused", action="store_true",
+                    default=None,
+                    help="LSTM: force single-launch fused decode kernels "
+                         "(default: on wherever shapes allow; sharded "
+                         "--mesh decode always chains)")
+    ap.add_argument("--no-fused", dest="fused", action="store_false",
+                    help="LSTM: force the chained per-kernel decode path")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=0.0,

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from . import layers as L
 from ..core import sparsity as S
-from ..core.packing import RowBalancedSparse
+from ..core.packing import RowBalancedSparse, pad_packed
 from ..kernels import ops as K
 from ..quant import RowBalancedSparseQ8, quantize_packed, parse_scheme
 from ..sparse import get_format, lstm_policy
@@ -61,32 +61,57 @@ class LSTMModel:
     ``partition_lstm_params``' gate-aligned row-sharded layout, the cache
     keeps c (and the delta partial sums m) sharded with h replicated, and
     each step's only collective is the all-gather of h. Composes with
-    ``delta`` and ``quant``."""
+    ``delta`` and ``quant``.
 
-    def __init__(self, cfg: LSTMConfig, delta=None, quant=None, mesh=None):
+    ``fused`` (None/True/False) controls single-launch decode: the
+    default (None) dispatches every packed step through the fused
+    ``kernels.fused_step`` kernels — dual-ratio SpMV + bias + gates +
+    cell in ONE ``pallas_call``, bitwise-identical to the chained path —
+    wherever shapes allow; sharded (``mesh``) decode always falls back to
+    the chained per-kernel path (the all-gather between Gate and Function
+    needs the kernel boundary). ``fused=False`` forces the chained path
+    (two to three launches per token)."""
+
+    def __init__(self, cfg: LSTMConfig, delta=None, quant=None, mesh=None,
+                 fused=None):
         self.cfg = cfg
         self.delta = delta
         self.quant = quant
         self.mesh = mesh
+        self.fused = fused
 
     def with_delta(self, delta) -> "LSTMModel":
         """Copy of this model serving through the temporal-delta path
         (``delta``: a DeltaGateConfig, or None to disable)."""
         return LSTMModel(self.cfg, delta=delta, quant=self.quant,
-                         mesh=self.mesh)
+                         mesh=self.mesh, fused=self.fused)
 
     def with_quant(self, quant) -> "LSTMModel":
         """Copy of this model carrying a quantization plan
         (``quant``: a repro.quant.QuantPlan, or None to disable)."""
         return LSTMModel(self.cfg, delta=self.delta, quant=quant,
-                         mesh=self.mesh)
+                         mesh=self.mesh, fused=self.fused)
 
     def with_mesh(self, mesh) -> "LSTMModel":
         """Copy of this model decoding through the sharded packed path
         (``mesh``: a Mesh with a ``model`` axis — serve it
         ``repro.dist.partition_lstm_params``' layout — or None)."""
         return LSTMModel(self.cfg, delta=self.delta, quant=self.quant,
-                         mesh=mesh)
+                         mesh=mesh, fused=self.fused)
+
+    def with_fused(self, fused) -> "LSTMModel":
+        """Copy of this model with single-launch fused decode forced on
+        (True), forced off (False), or automatic (None — on wherever
+        shapes allow)."""
+        return LSTMModel(self.cfg, delta=self.delta, quant=self.quant,
+                         mesh=self.mesh, fused=fused)
+
+    @property
+    def _use_fused(self) -> bool:
+        """Fused single-launch kernels on this step? Default-on; sharded
+        decode needs the chained kernel boundary for its collective."""
+        return (self.fused is None or bool(self.fused)) \
+            and self.mesh is None
 
     # ------------------------------------------------------------- params
     def param_defs(self) -> dict:
@@ -231,9 +256,32 @@ class LSTMModel:
                 if m is None:
                     m = _survivor_mask(lp[key])
                 s = fmt.pack(lp[key], m)
-                entry[out] = quantize_packed(s, scheme) if scheme else s
+                s = quantize_packed(s, scheme) if scheme else s
+                # pad the row axis to the kernel block multiple ONCE here
+                # instead of inside every jitted step (sharded decode
+                # re-partitions rows, so it packs unpadded)
+                entry[out] = s if self.mesh is not None else pad_packed(s)
             packed.append(entry)
         return packed
+
+    @staticmethod
+    def pad_packed_params(packed, block_rows: int = 256):
+        """Pre-pad every packed matrix's rows to the kernel-block multiple
+        (``core.packing.pad_packed``) so the per-step wrappers consume the
+        arrays as-is — no per-token re-pad copy of the weight stream on
+        the decode hot path. Accepts ``pack``'s per-layer list or a
+        SparsityPlan.pack'd param tree; no-op on already-padded or dense
+        leaves."""
+        def _pad(s):
+            return (pad_packed(s, block_rows)
+                    if isinstance(s, (RowBalancedSparse, RowBalancedSparseQ8))
+                    else s)
+        if isinstance(packed, dict) and "layers" in packed:
+            return {**packed, "layers": [
+                {**lp, "w_x": _pad(lp["w_x"]), "w_h": _pad(lp["w_h"])}
+                for lp in packed["layers"]]}
+        return [{**lp, "sx": _pad(lp["sx"]), "sh": _pad(lp["sh"])}
+                for lp in packed]
 
     @staticmethod
     def _packed_layers(packed):
@@ -374,19 +422,24 @@ class LSTMModel:
             return C.dist_lstm_step(self.mesh, params["layers"], x_t, state,
                                     pwl=cfg.pwl_activations, dtype=cfg.dtype,
                                     act_scales=scales)
+        fused = self._use_fused
         new_state = []
         inp = x_t
         for i, (lp, (c, h)) in enumerate(zip(params["layers"], state)):
             if quantized:
                 ax, ah = self._act_scales(i)
-                c, h = K.brds_lstm_step_q8(lp["w_x"], inp, lp["w_h"], h,
-                                           lp["b"], c, act_scale_x=ax,
-                                           act_scale_h=ah,
-                                           pwl=cfg.pwl_activations)
+                step_q8 = (K.fused_brds_lstm_step_q8 if fused
+                           else K.brds_lstm_step_q8)
+                c, h = step_q8(lp["w_x"], inp, lp["w_h"], h,
+                               lp["b"], c, act_scale_x=ax,
+                               act_scale_h=ah,
+                               pwl=cfg.pwl_activations)
             elif packed:
-                c, h = K.brds_lstm_step(lp["w_x"], inp, lp["w_h"], h,
-                                        lp["b"], c,
-                                        pwl=cfg.pwl_activations)
+                step = (K.fused_brds_lstm_step if fused
+                        else K.brds_lstm_step)
+                c, h = step(lp["w_x"], inp, lp["w_h"], h,
+                            lp["b"], c,
+                            pwl=cfg.pwl_activations)
             else:
                 z = (inp @ lp["w_x"].T + h @ lp["w_h"].T +
                      lp["b"][None, :]).astype(jnp.float32)
@@ -422,6 +475,7 @@ class LSTMModel:
             return C.dist_delta_lstm_step(
                 self.mesh, params["layers"], x_t, state, d,
                 pwl=cfg.pwl_activations, dtype=cfg.dtype, act_scales=scales)
+        fused = self._use_fused
         new_state = []
         inp = x_t
         for i, (lp, st) in enumerate(zip(params["layers"], state)):
@@ -438,12 +492,16 @@ class LSTMModel:
                 # (fixed-point schemes ignore it: they saturate by design)
                 ax = None if ax is None else 2.0 * ax
                 ah = None if ah is None else 2.0 * ah
-                c, h, m = K.brds_delta_lstm_step_q8(
+                step_q8 = (K.fused_brds_delta_lstm_step_q8 if fused
+                           else K.brds_delta_lstm_step_q8)
+                c, h, m = step_q8(
                     lp["w_x"], dx, fx, lp["w_h"], dh, fh, st["m"], lp["b"],
                     st["c"], act_scale_x=ax, act_scale_h=ah,
                     pwl=cfg.pwl_activations)
             elif packed:
-                c, h, m = K.brds_delta_lstm_step(
+                step_d = (K.fused_brds_delta_lstm_step if fused
+                          else K.brds_delta_lstm_step)
+                c, h, m = step_d(
                     lp["w_x"], dx, fx, lp["w_h"], dh, fh, st["m"], lp["b"],
                     st["c"], pwl=cfg.pwl_activations)
             else:

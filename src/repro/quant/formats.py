@@ -49,6 +49,9 @@ class RowBalancedSparseQ8:
     ncols:   static logical column count
     qmax:    static largest positive code (symmetric range)
     frac_bits: static   fixed-point fraction bits, or None for scaled
+    pad:     static count of zero rows appended by ``core.packing.
+             pad_packed`` (codes, deltas AND scales); ``rows`` stays logical
+    block_rows: static block size the padding targeted (None = unpadded)
     """
 
     values: jnp.ndarray
@@ -58,10 +61,23 @@ class RowBalancedSparseQ8:
     qmax: int = dataclasses.field(metadata=dict(static=True))
     frac_bits: int | None = dataclasses.field(
         default=None, metadata=dict(static=True))
+    pad: int = dataclasses.field(default=0, metadata=dict(static=True))
+    block_rows: int | None = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def rows(self) -> int:
-        return self.values.shape[-2]
+        return self.values.shape[-2] - self.pad
+
+    def logical(self) -> "RowBalancedSparseQ8":
+        """Padding-free view (slices off ``pad_packed``'s zero rows)."""
+        if not self.pad:
+            return self
+        r = self.rows
+        return dataclasses.replace(
+            self, values=self.values[..., :r, :],
+            deltas=self.deltas[..., :r, :], scales=self.scales[..., :r],
+            pad=0, block_rows=None)
 
     @property
     def K(self) -> int:
@@ -86,11 +102,15 @@ class RowBalancedSparseQ8:
 
     def memory_bytes(self) -> dict:
         """Storage accounting (values + indices + per-row scales) vs the
-        dense float32 equivalent."""
-        v = self.values.size * self.values.dtype.itemsize
-        i = self.deltas.size * self.deltas.dtype.itemsize
-        sc = self.scales.size * 4
-        dense = int(np.prod(self.values.shape[:-1])) * self.ncols * 4
+        dense float32 equivalent — logical rows only (``pad_packed``'s
+        zero rows are a layout artifact)."""
+        rows_total = self.values.size // self.values.shape[-1] \
+            - self.pad * (self.values.size // np.prod(self.values.shape[-2:]))
+        n = rows_total * self.K
+        v = n * self.values.dtype.itemsize
+        i = n * self.deltas.dtype.itemsize
+        sc = rows_total * 4
+        dense = rows_total * self.ncols * 4
         return dict(values=v, indices=i, scales=sc, total=v + i + sc,
                     dense_equiv=dense, ratio=(v + i + sc) / dense)
 
@@ -133,7 +153,9 @@ def _check_accumulator(codes, scheme: QuantScheme) -> None:
 
 
 def dequantize_packed(q: RowBalancedSparseQ8) -> P.RowBalancedSparse:
-    """Reconstruct the float packing (codes · per-row scales)."""
+    """Reconstruct the float packing (codes · per-row scales). Padding
+    from ``pad_packed`` is stripped (re-pad the result if needed)."""
+    q = q.logical()
     vals = q.values.astype(jnp.float32) * q.scales[..., None]
     return P.RowBalancedSparse(values=vals, deltas=q.deltas, ncols=q.ncols)
 

@@ -130,6 +130,10 @@ class ServeEngine:
         if pack:
             packed, pack_report = plan.pack(pruned, masks)
             packed = self._maybe_partition(packed)
+            if not self._dist and hasattr(self.model, "pad_packed_params"):
+                # hoist the kernel-block row padding out of the per-token
+                # hot path (sharded decode re-splits rows — skip there)
+                packed = self.model.pad_packed_params(packed)
             return packed, {**report, **pack_report}
         return pruned, report
 

@@ -104,3 +104,199 @@ def test_decode_attention_matches_ref(rng, B, Hq, Hkv, S, D):
     want = ref.decode_attention_ref(q, k, v, lengths)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
                                rtol=2e-5)
+
+
+# -------------------------------------------------- fused single-launch step
+# Parity bar (ISSUE 7): the fused kernels are BITWISE-identical to the
+# chained-kernel decode trajectories — array_equal, not allclose. Odd
+# H=40 exercises the block-padding path (R=160 → 192 at block_rows=64).
+
+def _packed_pair(rng, H, X, sx, sh):
+    wx = _rand(rng, (4 * H, X), jnp.float32)
+    wh = _rand(rng, (4 * H, H), jnp.float32)
+    return pack_from_dense(wx, sx), pack_from_dense(wh, sh)
+
+
+def _gates_split(z, H, c, *, pwl):
+    return lstm_gates(z[:, :H], z[:, H:2 * H], z[:, 2 * H:3 * H],
+                      z[:, 3 * H:], c, pwl=pwl)
+
+
+@pytest.mark.parametrize("pwl", [False, True])
+@pytest.mark.parametrize("B,X,H", [(3, 24, 40), (2, 16, 64)])
+def test_fused_step_bitwise_vs_chained(rng, pwl, B, X, H):
+    from repro.kernels import rb_dual_spmv, fused_brds_lstm_step
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    x = _rand(rng, (B, X), jnp.float32)
+    h = _rand(rng, (B, H), jnp.float32)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    c = _rand(rng, (B, H), jnp.float32)
+    z = rb_dual_spmv(sx_p, x, sh_p, h, b, block_rows=64)
+    cc, hc = _gates_split(z, H, c, pwl=pwl)
+    cf, hf = fused_brds_lstm_step(sx_p, x, sh_p, h, b, c, pwl=pwl,
+                                  block_rows=64)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cc))
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hc))
+
+
+@pytest.mark.parametrize("theta", [0.0, 0.1])
+@pytest.mark.parametrize("pwl", [False, True])
+def test_fused_delta_step_bitwise_vs_chained(rng, pwl, theta):
+    from repro.kernels import delta_rb_dual_spmv, fused_brds_delta_lstm_step
+    from repro.sparse.temporal import delta_threshold
+    B, X, H = 3, 24, 40
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    c = _rand(rng, (B, H), jnp.float32)
+    m0 = _rand(rng, (B, 4 * H), jnp.float32)
+    dx, fx, _ = delta_threshold(_rand(rng, (B, X), jnp.float32),
+                                jnp.zeros((B, X)), theta)
+    dh, fh, _ = delta_threshold(_rand(rng, (B, H), jnp.float32),
+                                jnp.zeros((B, H)), theta)
+    fx, fh = fx.astype(jnp.float32), fh.astype(jnp.float32)
+    mc = delta_rb_dual_spmv(sx_p, dx, fx, sh_p, dh, fh, m0, block_rows=64)
+    zc = mc.astype(jnp.float32) + b.astype(jnp.float32)[None, :]
+    cc, hc = _gates_split(zc, H, c, pwl=pwl)
+    cf, hf, mf = fused_brds_delta_lstm_step(sx_p, dx, fx, sh_p, dh, fh, m0,
+                                            b, c, pwl=pwl, block_rows=64)
+    np.testing.assert_array_equal(np.asarray(mf), np.asarray(mc))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cc))
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hc))
+
+
+@pytest.mark.parametrize("pwl", [False, True])
+def test_fused_q8_step_bitwise_vs_chained(rng, pwl):
+    from repro.kernels import rb_dual_spmv_q8, fused_brds_lstm_step_q8
+    from repro.quant import quantize_packed
+    B, X, H = 3, 24, 40
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    qsx, qsh = quantize_packed(sx_p, "int8"), quantize_packed(sh_p, "int8")
+    x = _rand(rng, (B, X), jnp.float32)
+    h = _rand(rng, (B, H), jnp.float32)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    c = _rand(rng, (B, H), jnp.float32)
+    ax, ah = 0.04, 0.03
+    z = rb_dual_spmv_q8(qsx, x, qsh, h, b, act_scale_x=ax, act_scale_h=ah,
+                        block_rows=64)
+    cc, hc = _gates_split(z, H, c, pwl=pwl)
+    cf, hf = fused_brds_lstm_step_q8(qsx, x, qsh, h, b, c, act_scale_x=ax,
+                                     act_scale_h=ah, pwl=pwl, block_rows=64)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cc))
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hc))
+
+
+def test_fused_delta_q8_step_bitwise_vs_chained(rng):
+    from repro.kernels import (delta_rb_dual_spmv_q8,
+                               fused_brds_delta_lstm_step_q8)
+    from repro.quant import quantize_packed
+    from repro.sparse.temporal import delta_threshold
+    B, X, H = 3, 24, 40
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    qsx, qsh = quantize_packed(sx_p, "int8"), quantize_packed(sh_p, "int8")
+    b = _rand(rng, (4 * H,), jnp.float32)
+    c = _rand(rng, (B, H), jnp.float32)
+    m0 = _rand(rng, (B, 4 * H), jnp.float32)
+    dx, fx, _ = delta_threshold(_rand(rng, (B, X), jnp.float32),
+                                jnp.zeros((B, X)), 0.1)
+    dh, fh, _ = delta_threshold(_rand(rng, (B, H), jnp.float32),
+                                jnp.zeros((B, H)), 0.1)
+    ax, ah = 0.08, 0.06
+    mc = delta_rb_dual_spmv_q8(qsx, dx, fx, qsh, dh, fh, m0, act_scale_x=ax,
+                               act_scale_h=ah, block_rows=64)
+    zc = mc + b.astype(jnp.float32)[None, :]
+    cc, hc = _gates_split(zc, H, c, pwl=False)
+    cf, hf, mf = fused_brds_delta_lstm_step_q8(
+        qsx, dx, fx, qsh, dh, fh, m0, b, c, act_scale_x=ax, act_scale_h=ah,
+        block_rows=64)
+    np.testing.assert_array_equal(np.asarray(mf), np.asarray(mc))
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cc))
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hc))
+
+
+@pytest.mark.parametrize("pwl", [False, True])
+def test_fused_scan_bitwise_vs_repeated_step(rng, pwl):
+    """T in-kernel steps == T separate fused launches, bitwise."""
+    from repro.kernels import fused_brds_lstm_step, fused_brds_lstm_scan
+    B, X, H, T = 3, 24, 40, 4
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    xs = _rand(rng, (T, B, X), jnp.float32)
+    h = h0 = _rand(rng, (B, H), jnp.float32)
+    c = c0 = _rand(rng, (B, H), jnp.float32)
+    hs_steps = []
+    for t in range(T):
+        c, h = fused_brds_lstm_step(sx_p, xs[t], sh_p, h, b, c, pwl=pwl,
+                                    block_rows=64)
+        hs_steps.append(h)
+    hs, cT = fused_brds_lstm_scan(sx_p, xs, sh_p, h0, b, c0, pwl=pwl,
+                                  block_rows=64)
+    np.testing.assert_array_equal(np.asarray(hs),
+                                  np.asarray(jnp.stack(hs_steps)))
+    np.testing.assert_array_equal(np.asarray(cT), np.asarray(c))
+
+
+def test_fused_delta_scan_bitwise_vs_repeated_step(rng):
+    """In-kernel thresholding + reference tracking + partial sums over T
+    steps == the host-thresholded per-step launches, bitwise."""
+    from repro.kernels import (fused_brds_delta_lstm_step,
+                               fused_brds_delta_lstm_scan)
+    from repro.sparse.temporal import delta_threshold
+    B, X, H, T = 3, 24, 40, 4
+    th_x, th_h = 0.1, 0.08
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    xs = _rand(rng, (T, B, X), jnp.float32)
+    h = h0 = _rand(rng, (B, H), jnp.float32)
+    c = c0 = _rand(rng, (B, H), jnp.float32)
+    xr, hr = jnp.zeros((B, X)), jnp.zeros((B, H))
+    m = m0 = jnp.zeros((B, 4 * H), jnp.float32)
+    hs_steps = []
+    for t in range(T):
+        dx, fx, xr = delta_threshold(xs[t], xr, th_x)
+        dh, fh, hr = delta_threshold(h, hr, th_h)
+        c, h, m = fused_brds_delta_lstm_step(
+            sx_p, dx, fx.astype(jnp.float32), sh_p, dh,
+            fh.astype(jnp.float32), m, b, c, block_rows=64)
+        hs_steps.append(h)
+    hs, cT, xrT, hrT, mT = fused_brds_delta_lstm_scan(
+        sx_p, xs, sh_p, h0, c0, jnp.zeros((B, X)), jnp.zeros((B, H)), m0,
+        b, theta_x=th_x, theta_h=th_h, block_rows=64)
+    np.testing.assert_array_equal(np.asarray(hs),
+                                  np.asarray(jnp.stack(hs_steps)))
+    np.testing.assert_array_equal(np.asarray(cT), np.asarray(c))
+    np.testing.assert_array_equal(np.asarray(xrT), np.asarray(xr))
+    np.testing.assert_array_equal(np.asarray(hrT), np.asarray(hr))
+    np.testing.assert_array_equal(np.asarray(mT), np.asarray(m))
+
+
+def test_fused_step_prepadded_struct_bitwise(rng):
+    """pad_packed'd structs (the pack/prepare-time hoist) produce the same
+    bits as the wrapper's internal padding of logical structs."""
+    from repro.core.packing import pad_packed
+    from repro.kernels import fused_brds_lstm_step
+    B, X, H = 3, 24, 40
+    sx_p, sh_p = _packed_pair(rng, H, X, 0.75, 0.5)
+    x = _rand(rng, (B, X), jnp.float32)
+    h = _rand(rng, (B, H), jnp.float32)
+    b = _rand(rng, (4 * H,), jnp.float32)
+    c = _rand(rng, (B, H), jnp.float32)
+    ca, ha = fused_brds_lstm_step(sx_p, x, sh_p, h, b, c, block_rows=64)
+    cb, hb = fused_brds_lstm_step(pad_packed(sx_p, 64), x,
+                                  pad_packed(sh_p, 64), h, b, c,
+                                  block_rows=64)
+    assert pad_packed(sx_p, 64).pad == 32   # 160 rows → 192
+    np.testing.assert_array_equal(np.asarray(ca), np.asarray(cb))
+    np.testing.assert_array_equal(np.asarray(ha), np.asarray(hb))
+
+
+@pytest.mark.parametrize("B,H", [(2, 100), (3, 40), (1, 200)])
+def test_lstm_gates_odd_hidden_matches_ref(rng, B, H):
+    """H not divisible by 64 pads to the nearest supported block and
+    slices (no silent one-giant-block fallback)."""
+    zs = [_rand(rng, (B, H), jnp.float32) * 3 for _ in range(4)]
+    c = _rand(rng, (B, H), jnp.float32)
+    ck, hk = lstm_gates(*zs, c, pwl=False)
+    cr, hr = ref.lstm_cell_ref(*zs, c, pwl=False)
+    assert ck.shape == (B, H) and hk.shape == (B, H)
+    np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hk), np.asarray(hr), atol=1e-5)

@@ -392,13 +392,20 @@ def test_delta_q8_doubles_calibrated_act_scales(rng, monkeypatch):
     packed, _ = lstm_policy(0.5, 0.5, quant=QuantConfig("int8")) \
         .compile(params).pack(pruned, masks)
     seen = {}
-    orig = K.brds_delta_lstm_step_q8
 
-    def spy(*a, **kw):
-        seen["ax"], seen["ah"] = kw["act_scale_x"], kw["act_scale_h"]
-        return orig(*a, **kw)
+    def spying(orig):
+        def spy(*a, **kw):
+            seen["ax"], seen["ah"] = kw["act_scale_x"], kw["act_scale_h"]
+            return orig(*a, **kw)
+        return spy
 
-    monkeypatch.setattr(K, "brds_delta_lstm_step_q8", spy)
+    # the model dispatches the fused single-launch op by default and the
+    # chained one under with_fused(False)/mesh — the doubling must reach
+    # whichever runs
+    monkeypatch.setattr(K, "brds_delta_lstm_step_q8",
+                        spying(K.brds_delta_lstm_step_q8))
+    monkeypatch.setattr(K, "fused_brds_delta_lstm_step_q8",
+                        spying(K.fused_brds_delta_lstm_step_q8))
     cache = dm.init_cache(2, 8)
     tokens = jax.random.randint(jax.random.key(5), (2, 1), 0,
                                 cfg.vocab_size)

@@ -314,3 +314,45 @@ def test_pack_preserves_zero_survivors(lstm):
     assert sx.values.shape[1] * 2 == m0.shape[1]
     cols = np.asarray(sx.col_indices())
     assert c in cols[r]
+
+
+def test_fused_decode_trajectory_parity(lstm):
+    """ISSUE 7 parity bar: the single-launch fused decode produces a
+    BITWISE-identical trajectory (tokens AND final cache) to the chained
+    per-kernel path, end to end through ServeEngine's jitted decode loop."""
+    cfg, _, params = lstm
+    plan = lstm_policy(0.6, 0.4).compile(params)
+    pruned, masks = plan.prune(params)
+    packed, _ = plan.pack(pruned, masks)
+    prompt = jax.random.randint(jax.random.key(3), (3, 6), 0, cfg.vocab_size)
+    outs = {}
+    for fused in (False, True):
+        model = LSTMModel(cfg, fused=fused)
+        assert model._use_fused is fused
+        eng = ServeEngine(model, cfg, max_len=20, batch=3)
+        outs[fused] = eng.generate(packed, prompt, 6, return_state=True)
+    toks_c, state_c = outs[False]
+    toks_f, state_f = outs[True]
+    np.testing.assert_array_equal(np.asarray(toks_f), np.asarray(toks_c))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        state_f["cache"], state_c["cache"])
+
+
+def test_fused_decode_trajectory_parity_delta_quant(lstm):
+    """Fused-vs-chained bitwise trajectory parity holds when the policy
+    layers on temporal deltas and int8 weights (the full BRDS stack)."""
+    from repro.quant import QuantConfig
+    from repro.sparse import DeltaGateConfig
+    cfg, _, params = lstm
+    policy = lstm_policy(0.6, 0.4, delta=DeltaGateConfig(0.05, 0.05),
+                         quant=QuantConfig("int8"))
+    prompt = jax.random.randint(jax.random.key(4), (2, 5), 0, cfg.vocab_size)
+    outs = {}
+    for fused in (False, True):
+        eng = ServeEngine(LSTMModel(cfg, fused=fused), cfg, max_len=16,
+                          batch=2, sparsity=policy)
+        prepared, _ = eng.prepare(params)
+        outs[fused] = np.asarray(eng.generate(prepared, prompt, 4))
+    np.testing.assert_array_equal(outs[True], outs[False])
