@@ -1,0 +1,34 @@
+"""Quality × compression records from the closed accuracy loop.
+
+Runs ``repro.launch.pipeline`` (train → prune → retrain → calibrate →
+pack → serve) and re-emits its grid rows through the common sink, so the
+quality trajectory — perplexity delta vs dense, packed weight bytes,
+serving tokens/s per (Spar_x, Spar_h) × scheme × Θ point — is diffed
+across PRs exactly like the perf benchmarks. Smoke shrinks the training
+budget to CI size (the quality numbers are then meaningless; the CI
+quality gate lives in the dedicated quality-smoke job, not here).
+"""
+from . import common
+
+
+def main():
+    from repro.launch.pipeline import PipelineConfig, run_pipeline
+    cfg = PipelineConfig(
+        train_steps=common.smoke(60, 300),
+        retrain_steps=common.smoke(40, 200),
+        eval_batches=common.smoke(2, 4),
+        spar_grid=common.smoke(((0.75, 0.5),),
+                               ((0.75, 0.5), (0.875, 0.625))),
+    )
+    payload = run_pipeline(cfg, smoke=common.SMOKE,
+                           log=lambda *_a, **_k: None)
+    for rec in payload["rows"]:
+        rec = dict(rec)
+        name = rec.pop("name")
+        us = rec.pop("us_per_call")
+        derived = " ".join(f"{k}={v}" for k, v in rec.items())
+        common.row(name, us, derived)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,15 @@ the records downstream tooling reads:
     - ≥1 fused_step_T* and ≥1 fused_scan_T* kernel row (the launch-
       amortisation curve); every scan row carries weights_fit_vmem
 
+  BENCH_pipeline.json
+    - exactly one pipeline_dense row (the baseline) with ppl
+    - ≥4 pipeline_sx* grid rows (a (Spar_x, Spar_h) × scheme × Θ grid),
+      each with ppl, ppl_delta_pct, weight_bytes, toks_per_s, spar_x,
+      spar_h, theta, scheme; ≥1 quantized (scheme != fp32) and ≥1
+      delta-gated (theta > 0) point so both legs of the grid exist
+    - exactly one pipeline_serve_parity row with bitwise == 1 — the
+      served-equals-retrained invariant held at every grid point
+
   every BENCH_*.json
     - top-level benchmark/smoke/wall_time_s/rows keys, rows a list of
       dicts each with name + us_per_call
@@ -95,12 +104,42 @@ def check_decode(path, payload):
             fail(f"{path}: {n} missing weights_fit_vmem flag")
 
 
+def check_pipeline(path, payload):
+    rows = {r["name"]: r for r in payload["rows"]}
+    if "pipeline_dense" not in rows:
+        fail(f"{path}: missing pipeline_dense baseline row")
+    if "ppl" not in rows["pipeline_dense"]:
+        fail(f"{path}: pipeline_dense missing ppl")
+    grid = [r for n, r in rows.items() if n.startswith("pipeline_sx")]
+    if len(grid) < 4:
+        fail(f"{path}: quality grid needs >=4 pipeline_sx* rows "
+             f"(scheme x theta at >=1 dual-ratio tuple), got {len(grid)}")
+    need = ("ppl", "ppl_delta_pct", "weight_bytes", "toks_per_s",
+            "spar_x", "spar_h", "theta", "scheme")
+    for r in grid:
+        for k in need:
+            if k not in r:
+                fail(f"{path}: {r['name']} missing {k!r}")
+    if not any(r["scheme"] != "fp32" for r in grid):
+        fail(f"{path}: no quantized grid point (every scheme is fp32)")
+    if not any(r["theta"] > 0 for r in grid):
+        fail(f"{path}: no delta-gated grid point (every theta is 0)")
+    if "pipeline_serve_parity" not in rows:
+        fail(f"{path}: missing pipeline_serve_parity row")
+    parity = rows["pipeline_serve_parity"]
+    if parity.get("bitwise") != 1:
+        fail(f"{path}: serve parity not bitwise: {parity}")
+    if parity.get("points", 0) < len(grid):
+        fail(f"{path}: parity checked at {parity.get('points')} points "
+             f"but the grid has {len(grid)}")
+
+
 def main():
     out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
     if not paths:
         fail(f"no BENCH_*.json found in {out_dir!r}")
-    saw_traffic = saw_decode = False
+    saw_traffic = saw_decode = saw_pipeline = False
     for path in paths:
         with open(path) as f:
             payload = json.load(f)
@@ -111,14 +150,20 @@ def main():
         if payload["benchmark"] == "decode_throughput":
             check_decode(path, payload)
             saw_decode = True
+        if payload["benchmark"] == "pipeline":
+            check_pipeline(path, payload)
+            saw_pipeline = True
     if not saw_traffic:
         fail("BENCH_traffic.json not produced (traffic module not "
              "registered in benchmarks/run.py?)")
     if not saw_decode:
         fail("BENCH_decode_throughput.json not produced (decode module "
              "not registered in benchmarks/run.py?)")
+    if not saw_pipeline:
+        fail("BENCH_pipeline.json not produced (pipeline module not "
+             "registered in benchmarks/run.py?)")
     print(f"check_bench_schema: OK ({len(paths)} files, traffic + decode "
-          "schemas verified)")
+          "+ pipeline schemas verified)")
 
 
 if __name__ == "__main__":

@@ -142,8 +142,14 @@ class LSTMModel:
     def init(self, rng):
         return L.init_params(self.param_defs(), rng)
 
+    def abstract_params(self):
+        return L.abstract_params(self.param_defs())
+
     def param_axes(self):
         return L.param_axes(self.param_defs())
+
+    def param_count(self) -> int:
+        return L.count_params(self.param_defs())
 
     # ------------------------------------------------------------- core
     @staticmethod
@@ -520,6 +526,64 @@ class LSTMModel:
                 "nh": st["nh"] + jnp.sum(fh, axis=1, dtype=jnp.float32)})
             inp = new_state[-1]["h"]
         return inp, new_state
+
+    def score(self, params, inputs, labels=None):
+        """Teacher-forced mean NLL through the SERVING step path.
+
+        Unlike ``loss`` (the training-time dense scan), ``score`` steps
+        every position through ``_step``/``_delta_step`` — the exact
+        per-token computation decode runs — so it accepts dense, packed
+        (RowBalancedSparse), quantized (RowBalancedSparseQ8), and
+        temporal-delta deployments alike and produces the quality number
+        *of the deployed model*. ``launch.pipeline`` uses it on both sides
+        of its serving-parity gate: the manually packed model and the
+        ``ServeEngine.prepare``'d one must score bitwise equal.
+
+        Parameters
+        ----------
+        params : pytree
+            Dense or packed param tree (embed/head stay dense either way).
+        inputs : jnp.ndarray
+            (B, T) token ids (LM — next-token NLL over positions 1..T-1)
+            or (B, T, X) frames (framewise — per-step NLL vs ``labels``).
+        labels : jnp.ndarray, optional
+            (B, T) int labels; defaults to ``inputs`` (the LM case).
+
+        Returns
+        -------
+        jnp.ndarray
+            Scalar fp32 mean NLL (``core.metrics.perplexity`` exponentiates
+            it).
+        """
+        from ..core.metrics import cross_entropy
+        cfg = self.cfg
+        if cfg.vocab_size:
+            x = L.embed_apply(params["embed"], inputs)
+            if labels is None:
+                labels = inputs
+        else:
+            x = inputs.astype(cfg.dtype)
+            if labels is None:
+                raise ValueError("framewise score needs labels")
+        B, T = x.shape[0], x.shape[1]
+        if self.delta is not None:
+            state0 = tuple(self.init_cache(B, T)["layers"])
+            step_fn = lambda st, x_t: self._delta_step(params, x_t, list(st))
+        else:
+            state0 = tuple(self.init_state(B))
+            step_fn = lambda st, x_t: self._step(params, x_t, st)
+
+        def body(st, x_t):
+            h, st2 = step_fn(st, x_t)
+            return tuple(st2), h
+
+        _, hs = jax.lax.scan(body, state0, x.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+        logits = jnp.einsum("bth,hv->btv", hs.astype(jnp.float32),
+                            params["head"]["w"].astype(jnp.float32))
+        if cfg.vocab_size:
+            return cross_entropy(logits[:, :-1], labels[:, 1:])
+        return cross_entropy(logits, labels)
 
     def _head_logits(self, params, h):
         """h (B, H) → logits (B, 1, V or C) fp32."""

@@ -15,6 +15,10 @@ generate corpora whose statistics make pruning-accuracy ORDERINGS measurable:
 
 Loaders are deterministic functions of (seed, step) — a restart at step k
 reproduces the exact same batch k (fault-tolerance invariant, tested).
+Every corpus also exposes ``eval_batches``: held-out batches drawn from a
+step namespace offset by ``EVAL_STEP_BASE`` so no training run of any
+realistic length can alias the eval stream (the old ``10_000 + i`` offset
+collided with training step 10_000).
 """
 from __future__ import annotations
 
@@ -22,6 +26,10 @@ import dataclasses
 
 import jax
 import numpy as np
+
+# Held-out eval batches draw from steps >= this base: far beyond any
+# reachable training step count, so train/eval streams never alias.
+EVAL_STEP_BASE = 1 << 40
 
 
 @dataclasses.dataclass
@@ -49,6 +57,10 @@ class ZipfInduction:
                                   self.rules[toks[:, t - 1]], base[:, t])
         toks = toks.astype(np.int32)
         return {"tokens": toks, "labels": toks}
+
+    def eval_batches(self, n: int, batch_size: int, seq_len: int):
+        return [self.batch(EVAL_STEP_BASE + i, batch_size, seq_len)
+                for i in range(n)]
 
 
 _CHAR_TEXT = (
@@ -79,7 +91,8 @@ class CharCorpus:
         return {"tokens": toks, "labels": toks}
 
     def eval_batches(self, n: int, batch_size: int, seq_len: int):
-        return [self.batch(10_000 + i, batch_size, seq_len) for i in range(n)]
+        return [self.batch(EVAL_STEP_BASE + i, batch_size, seq_len)
+                for i in range(n)]
 
 
 @dataclasses.dataclass
@@ -102,6 +115,10 @@ class FrameCorpus:
         scores = x @ self.proj
         labels = scores.argmax(-1).astype(np.int32)
         return {"inputs": x.astype(np.float32), "labels": labels}
+
+    def eval_batches(self, n: int, batch_size: int, seq_len: int):
+        return [self.batch(EVAL_STEP_BASE + i, batch_size, seq_len)
+                for i in range(n)]
 
 
 @dataclasses.dataclass

@@ -1,0 +1,164 @@
+"""Unit tests for core/metrics.py (previously untested) and for the
+Fig.-5 search in sparse/search.py on stub score functions: the search
+must return the argmax of its own history, walk the documented phases,
+and track a monotone preference for higher scores."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import (binary_accuracy, cross_entropy, perplexity,
+                                token_accuracy)
+from repro.sparse.search import (brds_search, execution_time_model,
+                                 plane_search)
+
+# ------------------------------------------------------------------ metrics
+
+
+def test_cross_entropy_matches_log_softmax():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(3, 5, 7)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 7, size=(3, 5)))
+    ref = -jax.nn.log_softmax(logits, axis=-1)
+    ref = np.asarray(ref)[np.arange(3)[:, None], np.arange(5)[None, :],
+                          np.asarray(labels)]
+    np.testing.assert_allclose(float(cross_entropy(logits, labels)),
+                               ref.mean(), rtol=1e-6)
+
+
+def test_cross_entropy_mask_excludes_positions():
+    rng = np.random.default_rng(1)
+    logits = jnp.asarray(rng.normal(size=(2, 4, 6)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 6, size=(2, 4)))
+    mask = jnp.asarray([[1, 1, 0, 0], [1, 0, 0, 0]], jnp.float32)
+    full = cross_entropy(logits[:, :2], labels[:, :2],
+                         mask=jnp.asarray([[1, 1], [1, 0]], jnp.float32))
+    masked = cross_entropy(logits, labels, mask=mask)
+    np.testing.assert_allclose(float(masked), float(full), rtol=1e-6)
+    # an all-zero mask must not divide by zero
+    zero = cross_entropy(logits, labels, mask=jnp.zeros((2, 4)))
+    assert np.isfinite(float(zero))
+
+
+def test_cross_entropy_uniform_logits():
+    """Uniform logits → NLL = log V exactly, so ppl = V."""
+    logits = jnp.zeros((2, 3, 8))
+    labels = jnp.asarray(np.random.default_rng(2).integers(0, 8, (2, 3)))
+    nll = float(cross_entropy(logits, labels))
+    np.testing.assert_allclose(nll, np.log(8.0), rtol=1e-6)
+    np.testing.assert_allclose(perplexity(nll), 8.0, rtol=1e-5)
+
+
+def test_perplexity_is_exp():
+    np.testing.assert_allclose(perplexity(0.0), 1.0)
+    np.testing.assert_allclose(perplexity(1.0), np.e, rtol=1e-12)
+
+
+def test_token_accuracy():
+    logits = jnp.asarray([[[0.1, 0.9], [0.8, 0.2]],
+                          [[0.3, 0.7], [0.6, 0.4]]])
+    labels = jnp.asarray([[1, 0], [0, 0]])
+    np.testing.assert_allclose(token_accuracy(logits, labels), 0.75)
+    mask = jnp.asarray([[1.0, 1.0], [0.0, 1.0]])  # drop the one miss
+    np.testing.assert_allclose(token_accuracy(logits, labels, mask), 1.0)
+
+
+def test_binary_accuracy():
+    logits = jnp.asarray([[2.0], [-1.0], [0.5], [-0.2]])
+    labels = jnp.asarray([1, 0, 0, 0])
+    np.testing.assert_allclose(binary_accuracy(logits, labels), 0.75)
+
+
+# ------------------------------------------------------------------- search
+
+
+def _stub_search(score_fn, overall=0.5, **kw):
+    """plane_search over a fake 'params' that just records the current
+    tuple; score_fn maps (spar_x, spar_h) -> accuracy."""
+    def visit(p, sx, sh):
+        return {"sx": sx, "sh": sh}, None
+
+    def eval_fn(p):
+        return score_fn(p["sx"], p["sh"])
+
+    return plane_search({"sx": 0.0, "sh": 0.0}, overall_sparsity=overall,
+                        visit=visit, eval_fn=eval_fn, **kw)
+
+
+def test_plane_search_returns_history_argmax():
+    """Whatever the score landscape, best_* must be the argmax of the
+    visited history — the search never returns a tuple it didn't score
+    or a score that beats its own best."""
+    def score(sx, sh):     # asymmetric, nonmonotone landscape
+        return -((sx - 0.7) ** 2) - 2.0 * (sh - 0.4) ** 2
+    res = _stub_search(score)
+    accs = [h["accuracy"] for h in res.history]
+    assert res.best_accuracy == max(accs)
+    top = res.history[int(np.argmax(accs))]
+    assert (res.best_spar_x, res.best_spar_h) == (top["spar_x"],
+                                                  top["spar_h"])
+
+
+def test_plane_search_phases_and_init_tuple():
+    res = _stub_search(lambda sx, sh: 0.0)
+    phases = [h["phase"] for h in res.history]
+    assert phases[0] == "init"
+    assert set(phases) == {"init", "x_up", "h_up"}
+    # phase 1 ramps both ratios to overall_sparsity
+    init = res.history[0]
+    assert init["spar_x"] == init["spar_h"] == 0.5
+    # x_up walks Spar_x up / Spar_h down; h_up the reverse
+    for h in res.history[1:]:
+        if h["phase"] == "x_up":
+            assert h["spar_x"] > 0.5 and h["spar_h"] < 0.5
+        else:
+            assert h["spar_x"] < 0.5 and h["spar_h"] > 0.5
+
+
+def test_plane_search_monotone_preference_for_spar_x():
+    """On a landscape that strictly rewards more Spar_x (the paper's
+    claim that W_x tolerates harsher pruning), the search must end at the
+    x_up extreme it visited — and symmetrically for Spar_h."""
+    res_x = _stub_search(lambda sx, sh: sx - 0.1 * sh)
+    xs = [h["spar_x"] for h in res_x.history if h["phase"] == "x_up"]
+    assert res_x.best_spar_x == max(xs)
+    res_h = _stub_search(lambda sx, sh: sh - 0.1 * sx)
+    hs = [h["spar_h"] for h in res_h.history if h["phase"] == "h_up"]
+    assert res_h.best_spar_h == max(hs)
+
+
+def test_brds_search_wires_policy_and_retrain():
+    """brds_search visits tuples through real policies: retrain_fn sees
+    (pruned, plan, masks) per visit and the winning tuple's policy is
+    returned. Uses a tiny real param tree."""
+    from repro.models import LSTMConfig, LSTMModel
+    from repro.sparse import lstm_policy
+    cfg = LSTMConfig("srch", input_size=8, hidden=8, num_layers=1,
+                     vocab_size=11)
+    params = LSTMModel(cfg).init(jax.random.key(0))
+    seen = []
+
+    def retrain_fn(pruned, plan, masks):
+        seen.append(set(masks))
+        return pruned
+
+    res = brds_search(
+        params, overall_sparsity=0.5,
+        policy_at=lambda sx, sh: lstm_policy(sx, sh),
+        retrain_fn=retrain_fn,
+        eval_fn=lambda p: 1.0)
+    assert res.best_policy is not None
+    assert all(s == {"layers/0/w_x", "layers/0/w_h"} for s in seen)
+    # phase 1 ramps through intermediate tuples that get no history entry
+    # (only the arrival point is scored), so visits >= scored points
+    assert len(seen) >= len(res.history)
+
+
+def test_execution_time_model_totals():
+    out = execution_time_model(0.5, 0.25, 0.05, 0.05, ept=2.0, n_re=3)
+    np.testing.assert_allclose(out["total"],
+                               out["ex1"] + out["ex2"] + out["ex3"])
+    assert out["ex1"] == (0.5 / 0.25) * 2.0 * 3
+    # more retrain epochs cost proportionally more
+    out2 = execution_time_model(0.5, 0.25, 0.05, 0.05, ept=2.0, n_re=6)
+    np.testing.assert_allclose(out2["total"], 2 * out["total"])

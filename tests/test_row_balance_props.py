@@ -1,0 +1,131 @@
+"""Property-based tests for the row-balance invariant at the FORMAT and
+POLICY layers (the registry surface the pipeline deploys through).
+
+test_sparsity.py proves the core-level mask/pack/unpack; these push the
+same invariant through ``get_format('row_balanced')`` /
+``'row_balanced_q8'`` and through compiled dual-ratio policies: for
+random shapes and ratios every pack keeps exactly k survivors per row,
+pack → unpack round-trips (to quantization tolerance for q8), and
+``lstm_policy`` applies Spar_x / Spar_h to the correct weight families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # container ships no hypothesis
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import apply_mask, keep_count
+from repro.models import LSTMConfig, LSTMModel
+from repro.sparse import get_format, lstm_policy
+
+dims = st.integers(min_value=2, max_value=40)
+spars = st.floats(min_value=0.0, max_value=0.95)
+seeds = st.integers(0, 2**31)
+
+
+def _w(rows, cols, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=(rows, cols)), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=seeds)
+def test_format_row_balanced_exact_k(rows, cols, spar, seed):
+    """Registry pack keeps exactly k = keep_count(ncols, ratio) per row:
+    values/deltas are (rows, k) and every unpacked row has ≤ k non-zeros
+    (< k only when a kept weight is exactly 0)."""
+    fmt = get_format("row_balanced")
+    w = _w(rows, cols, seed)
+    mask = fmt.mask(w, spar)
+    k = keep_count(cols, spar)
+    assert (np.asarray(mask.sum(axis=1)) == k).all()
+    packed = fmt.pack(w, mask)
+    assert packed.values.shape == (rows, k)
+    assert packed.deltas.shape == (rows, k)
+    cols_idx = np.asarray(packed.col_indices())
+    assert (np.diff(cols_idx, axis=1) > 0).all()
+    assert cols_idx.min() >= 0 and cols_idx.max() < cols
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=seeds)
+def test_format_row_balanced_roundtrip(rows, cols, spar, seed):
+    fmt = get_format("row_balanced")
+    w = _w(rows, cols, seed)
+    mask = fmt.mask(w, spar)
+    assert jnp.allclose(fmt.unpack(fmt.pack(w, mask)), apply_mask(w, mask))
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=seeds)
+def test_format_q8_exact_k_and_roundtrip(rows, cols, spar, seed):
+    """The quantized format preserves the structural invariant exactly —
+    same k survivors at the same columns — and round-trips values to
+    within one per-row quantization step."""
+    fmt = get_format("row_balanced_q8")
+    w = _w(rows, cols, seed)
+    mask = fmt.mask(w, spar)
+    k = keep_count(cols, spar)
+    assert (np.asarray(mask.sum(axis=1)) == k).all()
+    q = fmt.pack(w, mask)
+    assert q.values.shape == (rows, k)
+    ref_cols = np.asarray(get_format("row_balanced").pack(w, mask)
+                          .col_indices())
+    np.testing.assert_array_equal(np.asarray(q.col_indices()), ref_cols)
+    dense = np.asarray(fmt.unpack(q))
+    target = np.asarray(apply_mask(w, mask))
+    # int8 absmax: error ≤ scale/2, scale = rowmax/127
+    step = np.abs(target).max(axis=1, keepdims=True) / 127.0
+    assert (np.abs(dense - target) <= step / 2 + 1e-7).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(spar_x=st.floats(0.1, 0.9), spar_h=st.floats(0.1, 0.9),
+       hidden=st.integers(2, 12), seed=seeds)
+def test_dual_ratio_policy_targets_families(spar_x, spar_h, hidden, seed):
+    """lstm_policy(Spar_x, Spar_h) prunes w_x at Spar_x and w_h at Spar_h
+    — and nothing else: every row of every gate matrix keeps exactly the
+    family's keep_count, embeddings/head/biases stay dense."""
+    cfg = LSTMConfig("prop", input_size=8, hidden=hidden, num_layers=2,
+                     vocab_size=17)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(seed % 1000))
+    plan = lstm_policy(spar_x, spar_h).compile(params)
+    pruned, masks = plan.prune(params)
+    assert set(masks) == {"layers/0/w_x", "layers/0/w_h",
+                          "layers/1/w_x", "layers/1/w_h"}
+    for path, mask in masks.items():
+        spar = spar_x if path.endswith("w_x") else spar_h
+        ncols = mask.shape[-1]     # layout out_in: rows = 4H gate rows
+        k = keep_count(ncols, spar)
+        assert (np.asarray(mask.sum(axis=-1)) == k).all(), path
+    # pruned tree: masked where matched, untouched elsewhere
+    for li in range(2):
+        for fam in ("w_x", "w_h"):
+            m = masks[f"layers/{li}/{fam}"]
+            np.testing.assert_array_equal(
+                np.asarray(pruned["layers"][li][fam]),
+                np.asarray(params["layers"][li][fam] * m))
+        np.testing.assert_array_equal(np.asarray(pruned["layers"][li]["b"]),
+                                      np.asarray(params["layers"][li]["b"]))
+    np.testing.assert_array_equal(np.asarray(pruned["head"]["w"]),
+                                  np.asarray(params["head"]["w"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=dims, cols=dims, spar=spars, seed=seeds)
+def test_pack_preserves_zero_valued_survivors(rows, cols, spar, seed):
+    """Packing from an explicit mask must keep the mask's structure even
+    where the weight is 0 (retrained weights can cross zero) — survivor
+    columns come from the mask, not from the values."""
+    fmt = get_format("row_balanced")
+    w = _w(rows, cols, seed)
+    mask = fmt.mask(w, spar)
+    w_zeroed = w.at[:, 0].set(0.0)   # zero a column; mask unchanged
+    packed = fmt.pack(w_zeroed, mask)
+    np.testing.assert_array_equal(
+        np.asarray(packed.col_indices()),
+        np.asarray(fmt.pack(w, mask).col_indices()))
