@@ -1,0 +1,113 @@
+"""spec: speculative decoding with BRDS-packed recurrent drafts.
+
+Measures the repro.spec composition on this host (jnp ref formulations —
+the numbers track Python/dispatch structure, not hardware): a dense LSTM
+target served through ``ServeEngine.generate(draft=...)`` with drafts
+BUILT FROM THE SAME WEIGHTS by the sparsity stack, so the
+acceptance-rate × draft-cost × tokens/s trade surfaces the fidelity cost
+of each BRDS serving variant directly:
+
+  spec_target_only      — the baseline: target-only greedy decode (the
+                          row every speculative row's ``speedup`` divides
+                          against).
+  spec_k{K}_packed      — speculative decode at k ∈ {2, 4, 8} with the
+                          row-balanced-packed draft (0.875/0.75 dual
+                          ratio); derived columns carry acceptance_rate,
+                          accepted_per_round, toks_per_s, speedup, k.
+  spec_k{K}_packed_lo   — same k, LIGHTER pruning (0.5/0.25): the draft
+                          sparsity axis — higher fidelity, higher
+                          acceptance, higher per-proposal cost.
+  spec_k{K}_q8          — calibrated int8 packed draft (0.875/0.75): the
+                          quant point on the draft-cost curve.
+  spec_draft_cost       — the draft side alone (packed LSTM decode
+                          tok/s) and its cost ratio vs the target row.
+
+Greedy speculative decode is bitwise lossless (tests/test_spec.py), so
+every row emits exactly the baseline's tokens — only the wall clock and
+the acceptance accounting differ.
+"""
+import jax
+import numpy as np
+
+from repro.models import LSTMModel
+from repro.serving import ServeEngine
+from repro.sparse import QuantConfig, lstm_policy, use_backend
+from repro.spec import DraftModel
+from .common import bench_lstm_cfg, bench_lstm_dims, row, smoke, \
+    time_fn as _time
+
+B, P, G = bench_lstm_dims()
+KS = smoke((2, 4), (2, 4, 8))
+K_MID = 4
+
+
+def _packed_draft(model, cfg, params, a, b, quant=None, calib=None):
+    """Prune/pack (optionally quantize) the TARGET's own weights into a
+    draft — the engine's prepare path, so delta/quant rewiring applies."""
+    eng = ServeEngine(model, cfg, max_len=P + G, batch=B,
+                      sparsity=lstm_policy(a, b, quant=quant))
+    dparams, _ = eng.prepare(params, calib=calib)
+    return DraftModel(eng.model, dparams)
+
+
+def _spec_row(name, eng, params, prompt, draft, k, t_base):
+    state = {}
+
+    def run():
+        toks, st = eng.generate(params, prompt, G, draft=draft, spec_k=k,
+                                return_state=True)
+        state.update(st)
+        return toks
+
+    t = _time(run)
+    toks = B * G
+    drafted = int(np.sum(np.asarray(state["drafted"])))
+    accepted = int(np.sum(np.asarray(state["accepted"])))
+    rounds = int(np.sum(np.asarray(state["rounds"])))
+    row(name, t / toks * 1e6,
+        f"toks_per_s={toks / t:.0f} "
+        f"acceptance_rate={accepted / max(drafted, 1):.3f} "
+        f"accepted_per_round={accepted / max(rounds, 1):.2f} "
+        f"speedup={t_base / t:.2f}x k={k}")
+
+
+def main():
+    cfg = bench_lstm_cfg()
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    prompt = jax.random.randint(jax.random.key(1), (B, P), 0,
+                                cfg.vocab_size)
+    calib = jax.random.randint(jax.random.key(2), (B, P), 0, cfg.vocab_size)
+    eng = ServeEngine(model, cfg, max_len=P + G, batch=B)
+
+    with use_backend("ref"):
+        toks = B * G
+        t_base = _time(lambda: eng.generate(params, prompt, G))
+        row("spec_target_only", t_base / toks * 1e6,
+            f"toks_per_s={toks / t_base:.0f}")
+
+        # ---- k sweep on the standard packed draft (same weights) ------
+        draft_hi = _packed_draft(model, cfg, params, 0.875, 0.75)
+        for k in KS:
+            _spec_row(f"spec_k{k}_packed", eng, params, prompt, draft_hi,
+                      k, t_base)
+
+        # ---- draft-sparsity axis at fixed k ---------------------------
+        draft_lo = _packed_draft(model, cfg, params, 0.5, 0.25)
+        _spec_row(f"spec_k{K_MID}_packed_lo", eng, params, prompt,
+                  draft_lo, K_MID, t_base)
+        draft_q8 = _packed_draft(model, cfg, params, 0.875, 0.75,
+                                 quant=QuantConfig("int8"), calib=calib)
+        _spec_row(f"spec_k{K_MID}_q8", eng, params, prompt, draft_q8,
+                  K_MID, t_base)
+
+        # ---- the draft side alone: per-proposal cost ------------------
+        deng = ServeEngine(draft_hi.model, cfg, max_len=P + G, batch=B)
+        t_d = _time(lambda: deng.generate(draft_hi.params, prompt, G))
+        row("spec_draft_cost", t_d / toks * 1e6,
+            f"draft_toks_per_s={toks / t_d:.0f} "
+            f"cost_ratio={t_d / t_base:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,12 @@ the records downstream tooling reads:
     - exactly one pipeline_serve_parity row with bitwise == 1 — the
       served-equals-retrained invariant held at every grid point
 
+  BENCH_spec.json
+    - exactly one spec_target_only baseline row with toks_per_s
+    - ≥2 spec_k* speculative rows at ≥2 DISTINCT k values, each with
+      acceptance_rate, accepted_per_round, toks_per_s, speedup, k
+    - exactly one spec_draft_cost row with draft_toks_per_s + cost_ratio
+
   every BENCH_*.json
     - top-level benchmark/smoke/wall_time_s/rows keys, rows a list of
       dicts each with name + us_per_call
@@ -134,12 +140,38 @@ def check_pipeline(path, payload):
              f"but the grid has {len(grid)}")
 
 
+def check_spec(path, payload):
+    rows = {r["name"]: r for r in payload["rows"]}
+    if "spec_target_only" not in rows:
+        fail(f"{path}: missing spec_target_only baseline row")
+    if "toks_per_s" not in rows["spec_target_only"]:
+        fail(f"{path}: spec_target_only missing toks_per_s")
+    spec_rows = [r for n, r in rows.items() if n.startswith("spec_k")]
+    need = ("acceptance_rate", "accepted_per_round", "toks_per_s",
+            "speedup", "k")
+    for r in spec_rows:
+        for k in need:
+            if k not in r:
+                fail(f"{path}: {r['name']} missing {k!r}")
+        if not 0.0 <= r["acceptance_rate"] <= 1.0:
+            fail(f"{path}: {r['name']} acceptance_rate out of [0, 1]")
+    ks = {r["k"] for r in spec_rows}
+    if len(ks) < 2:
+        fail(f"{path}: speculative curve needs spec_k* rows at >=2 "
+             f"distinct k values, got k={sorted(ks)}")
+    if "spec_draft_cost" not in rows:
+        fail(f"{path}: missing spec_draft_cost row")
+    for k in ("draft_toks_per_s", "cost_ratio"):
+        if k not in rows["spec_draft_cost"]:
+            fail(f"{path}: spec_draft_cost missing {k!r}")
+
+
 def main():
     out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
     if not paths:
         fail(f"no BENCH_*.json found in {out_dir!r}")
-    saw_traffic = saw_decode = saw_pipeline = False
+    saw_traffic = saw_decode = saw_pipeline = saw_spec = False
     for path in paths:
         with open(path) as f:
             payload = json.load(f)
@@ -153,6 +185,9 @@ def main():
         if payload["benchmark"] == "pipeline":
             check_pipeline(path, payload)
             saw_pipeline = True
+        if payload["benchmark"] == "spec":
+            check_spec(path, payload)
+            saw_spec = True
     if not saw_traffic:
         fail("BENCH_traffic.json not produced (traffic module not "
              "registered in benchmarks/run.py?)")
@@ -162,8 +197,11 @@ def main():
     if not saw_pipeline:
         fail("BENCH_pipeline.json not produced (pipeline module not "
              "registered in benchmarks/run.py?)")
+    if not saw_spec:
+        fail("BENCH_spec.json not produced (spec module not registered "
+             "in benchmarks/run.py?)")
     print(f"check_bench_schema: OK ({len(paths)} files, traffic + decode "
-          "+ pipeline schemas verified)")
+          "+ pipeline + spec schemas verified)")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,8 @@ Serves every DecodeStep model — the transformer zoo AND the paper's LSTMs
       --brds --continuous --slots 4
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
       --brds --traffic --rate 16 --requests 64 --slots 8 --deadline 2.0
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --draft lstm_ptb --draft-brds --spec-k 4
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --arch lstm_ptb --smoke \
       --brds --mesh 2,4
@@ -95,6 +97,49 @@ def _build(args):
     return model, cfg, cfg.vocab_size, sparsity, extra_fn
 
 
+def _build_draft(args, vocab: int, max_len: int, batch: int):
+    """Build the --draft DraftModel: an LSTM LM rebound to the target's
+    vocab, prepared (prune/pack/delta/quant) through its own ServeEngine
+    so every BRDS serving variant can play draft."""
+    from repro.models import LSTMModel, LSTM_CONFIGS
+    from repro.serving import ServeEngine
+    from repro.spec import DraftModel
+
+    if args.draft not in LSTM_CONFIGS:
+        raise SystemExit(f"--draft wants an LSTM arch "
+                         f"({', '.join(LSTM_CONFIGS)}), got {args.draft!r}")
+    if args.draft_quant and not args.draft_brds:
+        raise SystemExit("--draft-quant requires --draft-brds")
+    cfg = LSTM_CONFIGS[args.draft]
+    if args.smoke:
+        cfg = dataclasses.replace(cfg, input_size=min(cfg.input_size, 128),
+                                  hidden=min(cfg.hidden, 128))
+    cfg = dataclasses.replace(cfg, vocab_size=vocab)
+    sparsity = None
+    if args.draft_brds or args.draft_delta is not None:
+        from repro.sparse import lstm_policy, DeltaGateConfig, QuantConfig
+        delta = None
+        if args.draft_delta is not None:
+            delta = DeltaGateConfig(theta_x=args.draft_delta,
+                                    theta_h=args.draft_delta)
+        quant = QuantConfig(args.draft_quant) if args.draft_quant else None
+        sparsity = lstm_policy(args.spar_a if args.draft_brds else 0.0,
+                               args.spar_b if args.draft_brds else 0.0,
+                               delta=delta, quant=quant)
+    deng = ServeEngine(LSTMModel(cfg), cfg, max_len=max_len, batch=batch,
+                       sparsity=sparsity)
+    dparams = deng.model.init(jax.random.key(7))
+    calib = None
+    if args.draft_quant:
+        calib = jax.random.randint(jax.random.key(8),
+                                   (batch, min(args.prompt_len, 32)),
+                                   0, vocab)
+    dparams, report = deng.prepare(dparams, calib=calib)
+    if report is not None:
+        print("draft BRDS:", report)
+    return DraftModel(deng.model, dparams)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b",
@@ -170,6 +215,23 @@ def main():
     ap.add_argument("--load-seed", type=int, default=0,
                     help="--traffic: arrival-trace RNG seed (the schedule "
                          "is fully deterministic given the seed)")
+    ap.add_argument("--draft", default=None, metavar="ARCH",
+                    help="speculative decoding: propose with this LSTM "
+                         "arch (e.g. lstm_ptb) rebound to the target's "
+                         "vocab; greedy output is bitwise identical to "
+                         "serving without it. Composes with --continuous "
+                         "and --traffic")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="--draft: tokens proposed per speculative round")
+    ap.add_argument("--draft-brds", action="store_true",
+                    help="row-balanced prune + pack the draft's weights "
+                         "(--spar-a/--spar-b ratios)")
+    ap.add_argument("--draft-delta", type=float, default=None,
+                    metavar="THETA",
+                    help="draft with temporal delta sparsity at THETA")
+    ap.add_argument("--draft-quant", default=None, metavar="SCHEME",
+                    help="draft with quantized packed weights ('int8' or "
+                         "'qM.N'); requires --draft-brds")
     args = ap.parse_args()
 
     from repro.serving import (ServeEngine, ContinuousBatchingEngine,
@@ -214,13 +276,21 @@ def main():
     sampling = SamplingConfig(temperature=args.temperature, top_k=args.top_k,
                               top_p=args.top_p, eos_id=args.eos_id)
 
+    draft = None
+    if args.draft is not None:
+        if args.mesh is not None:
+            raise SystemExit("--draft does not compose with --mesh yet")
+        draft = _build_draft(args, vocab, max_len, args.batch)
+        print(f"draft={args.draft} spec_k={args.spec_k}")
+
     if args.traffic:
         from repro.traffic import LoadConfig, poisson_trace, make_prompts, \
             serve_trace
         sched = ContinuousBatchingEngine(
             eng.model, params, slots=args.slots, max_len=max_len,
             sampling=sampling, dispatch_depth=args.dispatch_depth,
-            mesh=mesh if eng._dist else None)
+            mesh=mesh if eng._dist else None, draft=draft,
+            spec_k=args.spec_k)
         short_hi = max(5, args.prompt_len // 4)
         long_hi = max(short_hi + 1, args.prompt_len)
         lc = LoadConfig(rate=args.rate, num_requests=args.requests,
@@ -246,6 +316,11 @@ def main():
               f"p99={summary['p99_tpot_ms']:.2f}")
         print(f"goodput: {summary['goodput_tps']:.1f} tok/s "
               f"(total {summary['toks_per_s']:.1f} tok/s)")
+        if draft is not None:
+            st = sched.spec_stats()
+            print(f"spec: acceptance={st['acceptance_rate']:.1%} "
+                  f"({st['accepted']}/{st['drafted']} drafted over "
+                  f"{st['rounds']} rounds)")
         return
 
     if args.continuous:
@@ -254,7 +329,8 @@ def main():
         # scheduler has no sharded path for the transformer zoo)
         sched = ContinuousBatchingEngine(eng.model, params, slots=args.slots,
                                          max_len=max_len, sampling=sampling,
-                                         mesh=mesh if eng._dist else None)
+                                         mesh=mesh if eng._dist else None,
+                                         draft=draft, spec_k=args.spec_k)
         lens = [max(4, args.prompt_len - 3 * i) for i in range(args.batch)]
         for i, plen in enumerate(lens):
             req_rng = jax.random.fold_in(rng, i)
@@ -267,6 +343,11 @@ def main():
         print(f"served {len(results)} ragged requests "
               f"({total} tokens) in {dt:.2f}s ({total / dt:.1f} tok/s, "
               f"{sched.steps_dispatched} chunk dispatches)")
+        if draft is not None:
+            st = sched.spec_stats()
+            print(f"spec: acceptance={st['acceptance_rate']:.1%} "
+                  f"({st['accepted']}/{st['drafted']} drafted over "
+                  f"{st['rounds']} rounds)")
         if args.delta is not None:
             from repro.sparse import occupancy_report
             occ = occupancy_report(
@@ -287,11 +368,18 @@ def main():
     t0 = time.time()
     out, state = eng.generate(params, tokens, args.gen, extra=extra,
                               sampling=sampling, rng=jax.random.key(2),
-                              return_state=True)
+                              return_state=True, draft=draft,
+                              spec_k=args.spec_k)
     out.block_until_ready()
     dt = time.time() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s, one decode dispatch)")
+    if draft is not None:
+        drafted = int(np.sum(np.asarray(state["drafted"])))
+        accepted = int(np.sum(np.asarray(state["accepted"])))
+        rounds = int(np.sum(np.asarray(state["rounds"])))
+        print(f"spec: acceptance={accepted / max(drafted, 1):.1%} "
+              f"({accepted}/{drafted} drafted over {rounds} rounds)")
     if args.delta is not None:
         from repro.sparse import occupancy_report
         occ = occupancy_report(

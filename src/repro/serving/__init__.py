@@ -10,11 +10,12 @@
 from .engine import ServeEngine, cache_shardings
 from .runtime import (DecodeStep, conforms, decode_loop,
                       prefill_accepts_length)
-from .sampling import SamplingConfig, sample
+from .sampling import (SamplingConfig, sample, sample_dist, sample_from_dist,
+                       sample_with_dist)
 from .scheduler import (ContinuousBatchingEngine, Request, Finished,
                         TokenEvent)
 
 __all__ = ["ServeEngine", "cache_shardings", "DecodeStep", "conforms",
            "decode_loop", "prefill_accepts_length", "SamplingConfig",
-           "sample", "ContinuousBatchingEngine", "Request", "Finished",
-           "TokenEvent"]
+           "sample", "sample_dist", "sample_from_dist", "sample_with_dist",
+           "ContinuousBatchingEngine", "Request", "Finished", "TokenEvent"]

@@ -70,6 +70,7 @@ class ServeEngine:
             self._scalar = NamedSharding(mesh, P())
         self._prefill = jax.jit(model.prefill,
                                 static_argnames=("max_len",))
+        self._dprefills: dict = {}   # id(draft) → jitted draft prefill
 
     def prepare(self, params, pack: bool | None = None, calib=None):
         """Apply the engine's sparsity policy/plan to params. Prunes to the
@@ -173,10 +174,30 @@ class ServeEngine:
             self._loops[key] = fn
         return self._loops[key]
 
+    def _spec_loop(self, steps: int, k: int, sampling: SamplingConfig,
+                   draft):
+        """One jitted speculative round loop per (steps, k, sampling,
+        draft); target cache + draft state donated. Jits plain (no
+        explicit shardings) — the spec loop is a CPU/single-device
+        serving composition."""
+        key = ("spec", steps, k, sampling, draft.sampling, id(draft))
+        if key not in self._loops:
+            from ..spec import spec_decode_loop
+
+            def run(params, dparams, cache, dstate, probs, pos, rng):
+                return spec_decode_loop(
+                    self.model, draft, params, dparams, cache, dstate,
+                    probs, pos, rng, steps, k, sampling,
+                    limit=self.max_len)
+
+            self._loops[key] = jax.jit(run, donate_argnums=(2, 3))
+        return self._loops[key]
+
     def generate(self, params, tokens, steps: int, *, extra=None,
                  temperature: float = 0.0, top_k: int = 0, eos_id: int = -1,
                  rng=None, sampling: SamplingConfig | None = None,
-                 return_state: bool = False, lengths=None):
+                 return_state: bool = False, lengths=None, draft=None,
+                 spec_k: int = 4):
         """Generate ``steps`` tokens for a lockstep batch of prompts.
 
         tokens (B, S) prompt; ``extra`` is family-specific conditioning
@@ -193,6 +214,14 @@ class ServeEngine:
         positions. Requires a model whose prefill accepts ``length``
         (``runtime.prefill_accepts_length``); each row's output is
         bitwise what its unpadded batch=1 decode would produce (greedy).
+
+        ``draft`` (a ``repro.spec.DraftModel``) switches generation to
+        speculative rounds: the draft proposes ``spec_k`` tokens, the
+        target verifies the block in one dispatch, and both roll back to
+        the accepted prefix. Greedy output is bitwise identical to
+        ``draft=None``; ``return_state=True`` then also exposes per-row
+        ``rounds``/``drafted``/``accepted`` counters (acceptance-rate =
+        accepted / drafted).
         """
         if sampling is None:
             sampling = SamplingConfig(temperature=temperature, top_k=top_k,
@@ -220,6 +249,28 @@ class ServeEngine:
             logits, cache = self._prefill(params, tokens,
                                           max_len=self.max_len, extra=extra)
             pos = jnp.int32(tokens.shape[1])
+        if draft is not None:
+            from .sampling import sample_dist
+            dpf = self._dprefills.setdefault(
+                id(draft), jax.jit(draft.prefill,
+                                   static_argnames=("max_len",)))
+            if lengths is not None:
+                if not runtime.prefill_accepts_length(draft.model):
+                    raise TypeError(
+                        f"{type(draft.model).__name__}.prefill has no "
+                        "length-masked path — ragged speculative serving "
+                        "needs the `length` prefill parameter")
+                _, dstate = dpf(draft.params, tokens, max_len=self.max_len,
+                                length=lengths)
+                pos_v = lengths
+            else:
+                _, dstate = dpf(draft.params, tokens, max_len=self.max_len)
+                pos_v = jnp.full((tokens.shape[0],), tokens.shape[1],
+                                 jnp.int32)
+            probs = sample_dist(logits[:, -1], sampling)
+            toks, state = self._spec_loop(steps, spec_k, sampling, draft)(
+                params, draft.params, cache, dstate, probs, pos_v, rng)
+            return (toks, state) if return_state else toks
         toks, state = self._loop(steps, sampling)(params, cache, logits,
                                                   pos, rng)
         return (toks, state) if return_state else toks

@@ -68,6 +68,23 @@ class DecodeStep(Protocol):
         cache position (lockstep batch) or a (B,) int32 vector of
         per-sequence positions (continuous batching). Returns (logits
         (B, 1, V), cache).
+
+    Rewind contract
+    ---------------
+    ``pos`` is the source of truth for sequence length: positional cache
+    entries (leaves with a ``cache_seq`` axis — KV caches and their quant
+    scales) at positions ≥ ``pos`` must be DEAD — never read by a later
+    ``decode_step`` at any position, and freely overwritten. A caller may
+    therefore rewind a sequence by re-issuing a smaller ``pos`` (as
+    speculative decoding does after a partial acceptance): the stale tail
+    left in the buffers is invisible. Families honor this by masking
+    attention/lookups to positions < the current length and by writing
+    (not accumulating) at ``pos``. Non-positional leaves (recurrent
+    state: LSTM (c, h) + delta references, RG-LRU h/conv, RWKV S/x_*)
+    are exempt — they fold every consumed token irreversibly, so a
+    rewinder must checkpoint and restore them instead
+    (``repro.spec.verify.rollback`` splits the two kinds by
+    ``cache_defs`` axes).
     """
 
     def cache_defs(self, batch: int, max_len: int) -> Any: ...

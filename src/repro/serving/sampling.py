@@ -14,7 +14,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SamplingConfig", "sample"]
+__all__ = ["SamplingConfig", "sample", "sample_dist", "sample_with_dist",
+           "sample_from_dist"]
 
 _NEG = -1e30
 
@@ -49,13 +50,11 @@ class SamplingConfig:
         return self.eos_id >= 0
 
 
-def sample(rng, logits, cfg: SamplingConfig):
-    """logits (B, V) → next-token ids (B,) int32. ``cfg`` is static, so the
-    greedy/top-k/top-p branches resolve at trace time."""
-    logits = logits.astype(jnp.float32)
-    if cfg.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    scaled = logits / cfg.temperature
+def _filtered(logits, cfg: SamplingConfig):
+    """Temperature-scaled, top-k/top-p-masked logits (fp32). The shared
+    transform behind ``sample``/``sample_dist`` — only valid for
+    temperature > 0 (greedy short-circuits before filtering)."""
+    scaled = logits.astype(jnp.float32) / cfg.temperature
     if cfg.top_k > 0:
         kth = jax.lax.top_k(scaled, cfg.top_k)[0][..., -1:]
         scaled = jnp.where(scaled < kth, _NEG, scaled)
@@ -71,4 +70,45 @@ def sample(rng, logits, cfg: SamplingConfig):
         # smallest surviving logit per row = the cutoff threshold
         cut = jnp.min(jnp.where(keep, sort, jnp.inf), axis=-1, keepdims=True)
         scaled = jnp.where(scaled < cut, _NEG, scaled)
-    return jax.random.categorical(rng, scaled).astype(jnp.int32)
+    return scaled
+
+
+def sample(rng, logits, cfg: SamplingConfig):
+    """logits (B, V) → next-token ids (B,) int32. ``cfg`` is static, so the
+    greedy/top-k/top-p branches resolve at trace time."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(
+            jnp.int32)
+    return jax.random.categorical(rng, _filtered(logits, cfg)).astype(
+        jnp.int32)
+
+
+def sample_dist(logits, cfg: SamplingConfig):
+    """The distribution ``sample`` draws from: logits (..., V) → sampling
+    probabilities (..., V) fp32. Greedy is the one-hot of the argmax, so
+    distribution-space consumers (the speculative-decode acceptance rule)
+    degenerate exactly to the greedy token."""
+    logits = logits.astype(jnp.float32)
+    if cfg.temperature <= 0.0:
+        V = logits.shape[-1]
+        return jax.nn.one_hot(jnp.argmax(logits, axis=-1), V,
+                              dtype=jnp.float32)
+    return jax.nn.softmax(_filtered(logits, cfg), axis=-1)
+
+
+def sample_with_dist(rng, logits, cfg: SamplingConfig):
+    """``(sample(...), sample_dist(...))`` in one call: next-token ids (...,)
+    int32 plus the per-token sampling distribution (..., V) they were drawn
+    from. The ids are bitwise what ``sample`` returns for the same key."""
+    return sample(rng, logits, cfg), sample_dist(logits, cfg)
+
+
+def sample_from_dist(rng, dist, cfg: SamplingConfig):
+    """Draw ids (...,) int32 from an explicit probability vector (..., V)
+    (a ``sample_dist`` output or the speculative residual distribution) —
+    the filtering already happened, so greedy is a plain argmax and
+    temperature a plain categorical over log-probabilities."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(dist, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        rng, jnp.log(jnp.maximum(dist, 1e-30))).astype(jnp.int32)

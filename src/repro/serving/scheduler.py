@@ -116,6 +116,13 @@ class ContinuousBatchingEngine:
       ``time.perf_counter``; tests inject virtual clocks).
     - ``on_token``: per-token streaming callback
       ``(uid, tokens: list[int], first: bool)`` invoked at harvest.
+    - ``draft``: a ``repro.spec.DraftModel`` switches every decode chunk
+      to speculative rounds (``spec_k`` proposals per round): each slot
+      carries the draft's recurrent state alongside its cache rows, a
+      partial acceptance rolls both back, and chunks chain through the
+      carried next-token distribution exactly as plain chunks chain
+      through logits. Greedy token streams are bitwise identical to
+      ``draft=None``.
     """
 
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
@@ -124,7 +131,8 @@ class ContinuousBatchingEngine:
                  dispatch_depth: int = 2, prefill_batch: int = 1,
                  bucket_prompts: bool = True, max_queue: int | None = None,
                  clock: Callable[[], float] | None = None,
-                 on_token: Callable[[int, list, bool], None] | None = None):
+                 on_token: Callable[[int, list, bool], None] | None = None,
+                 draft=None, spec_k: int = 4):
         if not runtime.conforms(model):
             raise TypeError(
                 f"{type(model).__name__} does not implement the DecodeStep "
@@ -150,7 +158,14 @@ class ContinuousBatchingEngine:
         self.bucket_prompts = bucket_prompts
         self.on_token = on_token
         self._clock = clock or time.perf_counter
-        self._length_aware = runtime.prefill_accepts_length(model)
+        if draft is not None and mesh is not None:
+            raise ValueError("speculative decoding does not compose with "
+                             "sharded serving (mesh) yet")
+        self.draft = draft
+        self.spec_k = spec_k
+        # bucketed joint prefill needs BOTH models' length-masked paths
+        self._length_aware = runtime.prefill_accepts_length(model) and (
+            draft is None or runtime.prefill_accepts_length(draft.model))
 
         # ----- device-resident shared state (chained across dispatches)
         self.cache = model.init_cache(slots, max_len)
@@ -186,6 +201,25 @@ class ContinuousBatchingEngine:
         self._evict_fn = jax.jit(
             lambda done, s: done.at[s].set(True), donate_argnums=(0,))
 
+        # ----- speculative-decode state (per-slot draft state + the
+        # carried next-token distribution replacing chained logits)
+        if draft is not None:
+            from ..models import layers as L2
+            self.dstate = draft.init_cache(slots, max_len)
+            self._d_batch_axes = jax.tree.map(
+                lambda d: d.axes.index("batch"),
+                draft.model.cache_defs(slots, max_len), is_leaf=L2.is_pspec)
+            self.probs = None                   # (slots, V) fp32, lazy init
+            self._rounds = jnp.zeros((slots,), jnp.int32)
+            self._drafted = jnp.zeros((slots,), jnp.int32)
+            self._accepted = jnp.zeros((slots,), jnp.int32)
+            self._dprefill = jax.jit(draft.prefill,
+                                     static_argnames=("max_len",))
+            self._join_spec = jax.jit(self._join_spec_impl,
+                                      donate_argnums=(0, 1, 2, 3, 4, 5))
+            self._chunk_spec_fn = jax.jit(self._chunk_spec_impl,
+                                          donate_argnums=(2, 3))
+
     # ------------------------------------------------------------- device
     def _join_impl(self, cache, logits, pos, done, budget, pre_cache,
                    pre_logits, slots_v, lengths_v, budgets_v):
@@ -209,6 +243,38 @@ class ContinuousBatchingEngine:
             self.sampling, done=done, budget=budget, limit=self.max_len)
         # budget lives on device so the next chunk can dispatch before
         # this one's tokens reach the host
+        st["budget"] = jnp.maximum(budget - st["emitted"], 0)
+        return toks, st
+
+    def _join_spec_impl(self, cache, dstate, probs, pos, done, budget,
+                        pre_cache, pre_dstate, pre_logits, slots_v,
+                        lengths_v, budgets_v):
+        """The speculative join: scatter target cache rows AND draft state
+        rows at ``slots_v``, and seed the carried distribution from the
+        prefill logits (the spec loop's analogue of chained logits)."""
+        from .sampling import sample_dist
+
+        def upd(c, p, ax):
+            cm = jnp.moveaxis(c, ax, 0)
+            pm = jnp.moveaxis(p.astype(c.dtype), ax, 0)
+            return jnp.moveaxis(cm.at[slots_v].set(pm), 0, ax)
+
+        cache = jax.tree.map(upd, cache, pre_cache, self._batch_axes)
+        dstate = jax.tree.map(upd, dstate, pre_dstate, self._d_batch_axes)
+        probs = probs.at[slots_v].set(
+            sample_dist(pre_logits[:, -1], self.sampling))
+        pos = pos.at[slots_v].set(lengths_v)
+        done = done.at[slots_v].set(False)
+        budget = budget.at[slots_v].set(budgets_v)
+        return cache, dstate, probs, pos, done, budget
+
+    def _chunk_spec_impl(self, params, dparams, cache, dstate, probs, pos,
+                         rng, done, budget):
+        from ..spec import spec_decode_loop
+        toks, st = spec_decode_loop(
+            self.model, self.draft, params, dparams, cache, dstate, probs,
+            pos, rng, self.chunk, self.spec_k, self.sampling, done=done,
+            budget=budget, limit=self.max_len)
         st["budget"] = jnp.maximum(budget - st["emitted"], 0)
         return toks, st
 
@@ -305,14 +371,34 @@ class ContinuousBatchingEngine:
             lp, pre_cache = self._prefill(
                 self.params, jnp.asarray(group[0].prompt),
                 max_len=self.max_len, extra=group[0].extra)
-        if self.logits is None:
-            self.logits = jnp.zeros((self.slots,) + lp.shape[1:], lp.dtype)
-        self.cache, self.logits, self.pos, self.done, self.budget = \
-            self._join(self.cache, self.logits, self.pos, self.done,
-                       self.budget, pre_cache, lp,
-                       jnp.asarray(slots, jnp.int32),
-                       jnp.asarray(lengths, jnp.int32),
-                       jnp.asarray(budgets, jnp.int32))
+        slots_v = jnp.asarray(slots, jnp.int32)
+        lengths_v = jnp.asarray(lengths, jnp.int32)
+        budgets_v = jnp.asarray(budgets, jnp.int32)
+        if self.draft is not None:
+            if self._length_aware and self.bucket_prompts:
+                _, pre_d = self._dprefill(
+                    self.draft.params, jnp.asarray(padded),
+                    max_len=self.max_len, length=lengths_v)
+            else:
+                _, pre_d = self._dprefill(
+                    self.draft.params, jnp.asarray(group[0].prompt),
+                    max_len=self.max_len)
+            if self.probs is None:
+                self.probs = jnp.zeros((self.slots, lp.shape[-1]),
+                                       jnp.float32)
+            (self.cache, self.dstate, self.probs, self.pos, self.done,
+             self.budget) = self._join_spec(
+                self.cache, self.dstate, self.probs, self.pos, self.done,
+                self.budget, pre_cache, pre_d, lp, slots_v, lengths_v,
+                budgets_v)
+        else:
+            if self.logits is None:
+                self.logits = jnp.zeros((self.slots,) + lp.shape[1:],
+                                        lp.dtype)
+            self.cache, self.logits, self.pos, self.done, self.budget = \
+                self._join(self.cache, self.logits, self.pos, self.done,
+                           self.budget, pre_cache, lp, slots_v, lengths_v,
+                           budgets_v)
         for r, slot, budget in zip(group, slots, budgets):
             info = SlotInfo(r.uid, r.prompt_len, budget, r.deadline,
                             r.priority, admitted_at=now, extra=r.extra)
@@ -326,9 +412,20 @@ class ContinuousBatchingEngine:
         """Enqueue one decode chunk on the chained device state. Returns
         immediately — tokens are a future harvested later."""
         owners = self.pool.owners()
-        toks, st = self._chunk_fn(self.params, self.cache, self.logits,
-                                  self.pos, self.rng, self.done, self.budget)
-        self.cache, self.logits = st["cache"], st["logits"]
+        if self.draft is not None:
+            toks, st = self._chunk_spec_fn(
+                self.params, self.draft.params, self.cache, self.dstate,
+                self.probs, self.pos, self.rng, self.done, self.budget)
+            self.cache, self.dstate = st["cache"], st["dstate"]
+            self.probs = st["probs"]
+            self._rounds = self._rounds + st["rounds"]
+            self._drafted = self._drafted + st["drafted"]
+            self._accepted = self._accepted + st["accepted"]
+        else:
+            toks, st = self._chunk_fn(self.params, self.cache, self.logits,
+                                      self.pos, self.rng, self.done,
+                                      self.budget)
+            self.cache, self.logits = st["cache"], st["logits"]
         self.pos, self.rng = st["pos"], st["rng"]
         self.done, self.budget = st["done"], st["budget"]
         self.steps_dispatched += 1
@@ -422,3 +519,15 @@ class ContinuousBatchingEngine:
             if isinstance(ev, Finished):
                 results[ev.uid] = ev.tokens
         return results
+
+    def spec_stats(self) -> dict | None:
+        """Cumulative speculative-round accounting (one host sync):
+        ``rounds``/``drafted``/``accepted`` totals plus the aggregate
+        ``acceptance_rate`` = accepted / drafted. None without a draft."""
+        if self.draft is None:
+            return None
+        rounds = int(np.sum(np.asarray(self._rounds)))
+        drafted = int(np.sum(np.asarray(self._drafted)))
+        accepted = int(np.sum(np.asarray(self._accepted)))
+        return dict(rounds=rounds, drafted=drafted, accepted=accepted,
+                    acceptance_rate=accepted / max(drafted, 1))

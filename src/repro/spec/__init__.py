@@ -1,0 +1,27 @@
+"""repro.spec — speculative decoding with BRDS-packed recurrent drafts.
+
+The speculate-then-verify composition that turns the sparsity stack into a
+speedup for every architecture in the zoo: a tiny packed recurrent model
+(the paper's LSTM, or any DecodeStep family with O(1) state) proposes k
+tokens per round, the target scores all k+1 positions in one verify
+dispatch, an acceptance rule keeps a prefix, and both models roll back —
+the target by cache-position rewind (runtime.DecodeStep's rewind
+contract), the draft by checkpoint/restore of its recurrent state.
+
+- draft   — DraftModel adapter: proposal chain + state checkpoints
+- verify  — k-token target verify + positional/state cache rollback
+- accept  — greedy exact-match + rejection-sampling acceptance rules
+- loop    — the on-device speculate→verify→accept round loop
+
+Greedy speculative decode is LOSSLESS: bitwise identical to target-only
+greedy decode (tests/test_spec.py pins this for every draft variant).
+"""
+from .accept import (accept_length, greedy_accept, rejection_accept,
+                     residual_dist)
+from .draft import DraftModel
+from .loop import spec_decode_loop
+from .verify import cache_leaf_flags, rollback, state_leaves, verify_chain
+
+__all__ = ["DraftModel", "spec_decode_loop", "verify_chain", "rollback",
+           "state_leaves", "cache_leaf_flags", "greedy_accept",
+           "rejection_accept", "residual_dist", "accept_length"]

@@ -1,0 +1,74 @@
+"""Acceptance rules + accepted-length accounting for speculative decode.
+
+Conventions (one round, batch row dropped): the draft proposed
+``d_1..d_k`` with proposal distributions ``q_1..q_k``; the target's verify
+produced distributions ``p_0..p_k`` where ``p_{i-1}`` governs the slot
+``d_i`` sits in and ``p_k`` is the bonus slot after a full acceptance.
+``accept_len`` a ∈ [0, k] is the length of the accepted draft PREFIX; the
+round then commits a+1 tokens total (the round-opening committed token
+plus the a accepted proposals) and samples the next token from
+``residual_dist`` — the standard corrected distribution on a rejection,
+the plain bonus distribution ``p_k`` on full acceptance.
+
+Greedy (temperature 0) uses the exact-match rule; with one-hot greedy
+distributions the rejection rule reduces to it, so the same residual
+machinery serves both and greedy stays deterministic and lossless.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["accept_length", "greedy_accept", "rejection_accept",
+           "residual_dist"]
+
+
+def accept_length(ok):
+    """(B, k) per-position accept bools → (B,) accepted-PREFIX length
+    (acceptance stops at the first rejection; later accepts don't count)."""
+    return jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+
+
+def greedy_accept(draft_tokens, target_logits):
+    """Greedy exact-match rule: accept ``d_i`` while it equals the target's
+    argmax at its slot. ``draft_tokens`` (B, k); ``target_logits``
+    (B, ≥k, V) raw logits or distributions (argmax-invariant)."""
+    k = draft_tokens.shape[1]
+    tgt = jnp.argmax(target_logits[:, :k].astype(jnp.float32), axis=-1)
+    return accept_length(draft_tokens == tgt.astype(draft_tokens.dtype))
+
+
+def rejection_accept(rng, draft_tokens, p_dists, q_dists):
+    """Standard speculative-sampling rule: accept ``d_i`` while
+    ``u_i < p_{i-1}(d_i) / q_i(d_i)`` with u_i ~ U[0, 1). Combined with
+    ``residual_dist`` resampling this makes the emitted tokens exact
+    samples from the target distribution chain. ``p_dists`` (B, k+1, V),
+    ``q_dists`` (B, k, V) — both post-sampling-transform probabilities
+    (``sampling.sample_dist``)."""
+    B, k = draft_tokens.shape
+    idx = draft_tokens[..., None].astype(jnp.int32)
+    p_tok = jnp.take_along_axis(p_dists[:, :k], idx, axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(q_dists, idx, axis=-1)[..., 0]
+    u = jax.random.uniform(rng, (B, k))
+    # u * q < p  ⇔  u < p/q without the division-by-zero hazard
+    ok = u * jnp.maximum(q_tok, 1e-30) < p_tok
+    return accept_length(ok)
+
+
+def residual_dist(p_dists, q_dists, accept_len):
+    """Next-token distribution at the round's stop slot (B, V).
+
+    On a rejection at slot a < k: ``norm(max(p_a − q_{a+1}, 0))`` — the
+    corrected distribution that makes rejection sampling exact. On full
+    acceptance (a = k): the plain bonus distribution ``p_k``. Degenerate
+    all-zero residuals (p ≤ q everywhere mass sits) fall back to ``p_a``.
+    """
+    B, k1, V = p_dists.shape
+    qz = jnp.concatenate(
+        [q_dists, jnp.zeros((B, 1, V), q_dists.dtype)], axis=1)
+    a = accept_len[:, None, None].astype(jnp.int32)
+    p_a = jnp.take_along_axis(p_dists, a, axis=1)[:, 0]
+    q_a = jnp.take_along_axis(qz, a, axis=1)[:, 0]
+    res = jnp.maximum(p_a - q_a, 0.0)
+    z = jnp.sum(res, axis=-1, keepdims=True)
+    return jnp.where(z > 0, res / jnp.maximum(z, 1e-30), p_a)

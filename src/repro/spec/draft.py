@@ -1,0 +1,175 @@
+"""DraftModel: a BRDS-packed recurrent model adapted as speculative draft.
+
+Wraps any DecodeStep model whose decode cache is pure O(1) recurrent state
+(no ``cache_seq`` axis in its ``cache_defs``) — the paper's LSTM in every
+serving variant (dense, packed, temporal-delta, calibrated q8, fused) and
+the RWKV/RG-LRU ref decode. Positional-cache models are rejected: a draft
+must checkpoint/restore its whole state per round, which is only O(1)
+cheap for recurrent families.
+
+The adapter provides the three draft-side operations of a speculative
+round:
+
+- ``prefill`` primes the state on the committed prompt. Packed fp32 LSTM
+  drafts route exact-length prompts through the multi-token
+  ``fused_brds_lstm_scan`` kernel — one launch per layer with (c, h)
+  resident in VMEM across the whole prompt. Draft state needs no bitwise
+  contract with anything (it only shapes proposal quality), so this fast
+  path is free to diverge at the ulp level from the masked prefill body.
+- ``propose`` runs the k-token proposal chain (k+1 decode steps in one
+  scan) and stacks a state checkpoint per consumed token.
+- ``select`` is the rollback: restore the checkpoint at each row's
+  committed-token count after acceptance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..serving import runtime
+from ..serving.sampling import sample_dist, sample_from_dist
+from . import verify
+
+__all__ = ["DraftModel"]
+
+
+class DraftModel:
+    """Speculative-draft adapter around a recurrent DecodeStep model.
+
+    Parameters
+    ----------
+    model : DecodeStep
+        The draft family (LSTMModel/RWKV-style); its cache must be pure
+        recurrent state.
+    params : pytree
+        Dense, packed, delta-wired, or q8 draft params — ``decode_step``
+        dispatches on the leaves, so every BRDS serving variant drafts
+        through its own kernels. Stored as a convenience handle; the
+        engine passes params explicitly at the jit boundary.
+    sampling : SamplingConfig, optional
+        Proposal distribution config. Default None → the target's own
+        sampling config (the standard choice: proposals are drawn from
+        the same transform the acceptance rule scores them under).
+    scan_prefill : bool, optional
+        Force (True) or disable (False) the fused multi-token scan-kernel
+        prefill; None (default) auto-enables it for packed fp32 LSTM
+        params on exact-length prompts up to 64 tokens.
+    """
+
+    def __init__(self, model, params, *, sampling=None, scan_prefill=None):
+        if not runtime.conforms(model):
+            raise TypeError(
+                f"{type(model).__name__} does not implement the DecodeStep "
+                "serving contract (cache_defs / prefill / decode_step)")
+        positional, _ = verify.cache_leaf_flags(model)
+        if any(positional):
+            raise TypeError(
+                f"{type(model).__name__} keeps a positional (cache_seq) "
+                "decode cache — a speculative draft must carry O(1) "
+                "recurrent state so each round can checkpoint/restore it "
+                "(use the LSTM/RWKV/RG-LRU families)")
+        self.model = model
+        self.params = params
+        self.sampling = sampling
+        self.scan_prefill = scan_prefill
+
+    def init_cache(self, batch: int, max_len: int):
+        return self.model.init_cache(batch, max_len)
+
+    # ---------------------------------------------------------- prefill
+    def prefill(self, params, tokens, max_len: int, extra=None, length=None):
+        """Prime the draft state on the prompt → (logits (B, 1, V), state).
+
+        Mirrors ``model.prefill`` (``length`` supported when the model's
+        is), with the fused-scan fast path where it applies."""
+        if self._can_scan_prefill(params, tokens, length):
+            return self._scan_prefill_lstm(params, tokens)
+        if length is not None:
+            return self.model.prefill(params, tokens, max_len, extra=extra,
+                                      length=length)
+        return self.model.prefill(params, tokens, max_len, extra=extra)
+
+    def _can_scan_prefill(self, params, tokens, length) -> bool:
+        if self.scan_prefill is False or length is not None:
+            return False
+        m = self.model
+        if not (hasattr(m, "is_packed") and hasattr(m, "cfg")):
+            return False
+        if (getattr(m, "delta", None) is not None
+                or getattr(m, "quant", None) is not None
+                or getattr(m, "mesh", None) is not None):
+            return False
+        if not getattr(m.cfg, "vocab_size", 0) or tokens.ndim != 2:
+            return False
+        try:
+            packed = m.is_packed(params) and not m.is_quantized(params)
+        except (KeyError, IndexError, TypeError):
+            return False
+        if not packed:
+            return False
+        # the ref-backend scan unrolls T python steps — keep compiles small
+        return self.scan_prefill is True or tokens.shape[1] <= 64
+
+    def _scan_prefill_lstm(self, params, tokens):
+        """Layer-by-layer ``fused_brds_lstm_scan`` over the whole prompt:
+        the multi-token kernel consumes the embedded token sequence with
+        (c, h) in VMEM scratch, one launch per layer."""
+        from ..kernels import ops as K
+        from ..models import layers as L
+        m, cfg = self.model, self.model.cfg
+        B = tokens.shape[0]
+        xs = L.embed_apply(params["embed"], tokens).astype(
+            cfg.dtype).transpose(1, 0, 2)                  # (T, B, X)
+        layers = []
+        for lp in params["layers"]:
+            h0 = jnp.zeros((B, cfg.hidden), cfg.dtype)
+            c0 = jnp.zeros((B, cfg.hidden), cfg.dtype)
+            hs, c_t = K.fused_brds_lstm_scan(
+                lp["w_x"], xs, lp["w_h"], h0, lp["b"], c0,
+                pwl=cfg.pwl_activations)
+            xs = hs.astype(cfg.dtype)
+            layers.append({"c": c_t.astype(cfg.dtype), "h": xs[-1]})
+        return m._head_logits(params, xs[-1]), {"layers": layers}
+
+    # ---------------------------------------------------------- propose
+    def propose(self, params, state, nxt, pos, k: int, rng, cfg):
+        """The k-token proposal chain with rollback checkpoints.
+
+        Runs k+1 draft steps in one scan: step j consumes token c_j of
+        ``[nxt, d_1..d_k]`` (``nxt`` is the round's target-committed
+        token) and samples d_{j+1} from the draft's sampling distribution
+        under ``cfg``. Returns
+
+        - ``tokens`` (B, k) — the proposals d_1..d_k;
+        - ``qdists`` (B, k, V) — their proposal distributions (the
+          rejection rule's q_i);
+        - ``states`` — stacked cache-leaf checkpoints, leading axis k+2:
+          index m is the draft state after consuming m tokens of
+          ``[nxt, d_1..d_k]`` (m=0 pre-round) — ``select(states, m)``
+          is the re-prime after m tokens commit.
+        """
+        def body(carry, j):
+            st, tok, r = carry
+            r, rk = jax.random.split(r)
+            logits, st2 = self.model.decode_step(params, st, tok[:, None],
+                                                 pos + j)
+            q = sample_dist(logits[:, -1], cfg)
+            nxt_d = sample_from_dist(rk, q, cfg)
+            return (st2, nxt_d, r), (nxt_d, q,
+                                     tuple(jax.tree.leaves(st2)))
+
+        (_, _, _), (toks, qs, stacked) = jax.lax.scan(
+            body, (state, jnp.asarray(nxt, jnp.int32), rng),
+            jnp.arange(k + 1, dtype=jnp.int32))
+        pre = tuple(jax.tree.leaves(state))
+        states = tuple(jnp.concatenate([p[None].astype(s.dtype), s], axis=0)
+                       for p, s in zip(pre, stacked))
+        return toks[:k].T, jnp.moveaxis(qs[:k], 0, 1), states
+
+    # ----------------------------------------------------------- rollback
+    def select(self, state_template, states, commit):
+        """Checkpoint/restore rollback: the draft state after ``commit``
+        (B,) tokens of the round's block committed. ``state_template`` is
+        any cache with the right tree structure (e.g. the pre-round
+        state)."""
+        return verify.rollback(self.model, state_template, states, commit)

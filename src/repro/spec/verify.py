@@ -1,0 +1,105 @@
+"""k-token target verify: DecodeStep generalized to (B, k) token blocks.
+
+``verify_chain`` scores a block of k tokens in ONE dispatch by scanning the
+model's own ``decode_step`` body over the block — the same ops the
+target-only decode loop runs, so the per-position logits are bitwise what
+sequential decoding would produce (the losslessness invariant rides on
+this), and k=1 degenerates to exactly one decode_step.
+
+Rollback after partial acceptance splits the decode cache by leaf kind,
+read off the ``cache_defs`` logical axes:
+
+- *positional* leaves (a ``cache_seq`` axis — KV caches and their quant
+  scales) roll back by position rewind alone: the DecodeStep contract
+  requires entries at positions ≥ ``pos`` to be dead, so the rejected
+  tail can simply be left in the buffers and overwritten next round;
+- *state* leaves (everything else — LSTM (c, h) + delta reference state,
+  RG-LRU h/conv, RWKV S/x_tm/x_cm) are O(1) per step, so the scan
+  checkpoints them per verified token and ``rollback`` restores the
+  checkpoint at each row's accepted length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import layers as L
+
+__all__ = ["cache_leaf_flags", "state_leaves", "verify_chain", "rollback"]
+
+
+def cache_leaf_flags(model):
+    """Per-cache-leaf (positional?, batch_axis) lists in flatten order.
+
+    Read from ``model.cache_defs``: a leaf is positional iff its logical
+    axes include ``cache_seq``; ``batch_axis`` is where the batch dimension
+    sits (layer-stacked blocks put ``layers`` ahead of it)."""
+    defs = model.cache_defs(2, 4)    # axes don't depend on sizes
+    positional = jax.tree.leaves(jax.tree.map(
+        lambda d: "cache_seq" in d.axes, defs, is_leaf=L.is_pspec))
+    batch_axes = jax.tree.leaves(jax.tree.map(
+        lambda d: d.axes.index("batch"), defs, is_leaf=L.is_pspec))
+    return positional, batch_axes
+
+
+def state_leaves(model, cache):
+    """The non-positional (recurrent-state) cache leaves, flatten order."""
+    positional, _ = cache_leaf_flags(model)
+    return tuple(leaf for leaf, p in zip(jax.tree.leaves(cache), positional)
+                 if not p)
+
+
+def verify_chain(model, params, cache, tokens, pos):
+    """Score a (B, T) token block in one dispatch.
+
+    Scans ``model.decode_step`` over the block (token j lands at cache
+    position ``pos + j``; ``pos`` scalar or (B,)). Returns
+
+    - ``logits`` (B, T, V) fp32 — position j's logits condition on tokens
+      ``[:j]`` of the block, i.e. the distribution for the token AFTER
+      ``tokens[:, j]``;
+    - ``cache`` — the post-block cache (positions pos..pos+T-1 written);
+    - ``states`` — per-leaf stacked state checkpoints with leading axis
+      T+1: index m is the state after consuming m block tokens (m=0 is
+      the pre-block state), ready for ``rollback``.
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    T = tokens.shape[1]
+    positional, _ = cache_leaf_flags(model)
+    pre = state_leaves(model, cache)
+
+    def body(c, xt):
+        tok, j = xt
+        logits, c2 = model.decode_step(params, c, tok[:, None], pos + j)
+        sts = tuple(leaf for leaf, p in
+                    zip(jax.tree.leaves(c2), positional) if not p)
+        return c2, (logits[:, 0].astype(jnp.float32), sts)
+
+    cache, (logits, stacked) = jax.lax.scan(
+        body, cache, (tokens.T, jnp.arange(T, dtype=jnp.int32)))
+    states = tuple(jnp.concatenate([p[None].astype(s.dtype), s], axis=0)
+                   for p, s in zip(pre, stacked))
+    return jnp.moveaxis(logits, 0, 1), cache, states
+
+
+def rollback(model, cache, states, commit):
+    """Roll a post-verify cache back to ``commit`` (B,) accepted tokens.
+
+    Positional leaves keep the scan-final buffers unchanged — the caller
+    rewinds ``pos`` to ``pos + commit`` and the rejected tail at positions
+    ≥ the rewound pos is dead by the DecodeStep rewind contract. State
+    leaves are restored from the ``verify_chain`` checkpoints at each
+    row's ``commit`` index (0 = pre-block state)."""
+    positional, batch_axes = cache_leaf_flags(model)
+    commit = jnp.asarray(commit, jnp.int32)
+    rows = jnp.arange(commit.shape[0])
+    out, si = [], 0
+    for leaf, p, ax in zip(jax.tree.leaves(cache), positional, batch_axes):
+        if p:
+            out.append(leaf)
+        else:
+            s = jnp.moveaxis(states[si], ax + 1, 1)     # (T+1, B, ...)
+            out.append(jnp.moveaxis(s[commit, rows], 0, ax))
+            si += 1
+    return jax.tree.unflatten(jax.tree.structure(cache), out)

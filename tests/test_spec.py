@@ -1,0 +1,377 @@
+"""repro.spec: speculative decoding with BRDS-packed recurrent drafts.
+
+The load-bearing invariant is LOSSLESSNESS: greedy speculative decode is
+bitwise identical to target-only greedy decode — for every draft serving
+variant (dense, packed, delta Θ=0, calibrated q8), every tested k, every
+target family (LSTM, transformer, RG-LRU hybrid, RWKV), and through the
+continuous-batching scheduler. Plus the DecodeStep rewind-contract
+regression (decode, roll back, decode different tokens, bitwise-match a
+fresh-from-prefill trajectory) and unit tests for the sampling
+distributions and acceptance rules.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import build_model, LSTMModel, LSTMConfig
+from repro.serving import (ContinuousBatchingEngine, SamplingConfig,
+                           ServeEngine, sample, sample_dist,
+                           sample_from_dist, sample_with_dist)
+from repro.spec import (DraftModel, greedy_accept, accept_length,
+                        rejection_accept, residual_dist, rollback,
+                        spec_decode_loop, verify_chain)
+from repro.sparse import (DeltaGateConfig, QuantConfig, lstm_policy,
+                          use_backend)
+
+MAX_LEN = 40
+GREEDY = SamplingConfig(eos_id=-1)
+
+
+@pytest.fixture(scope="module")
+def lstm():
+    cfg = LSTMConfig("t", input_size=16, hidden=32, num_layers=2,
+                     vocab_size=50)
+    model = LSTMModel(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _draft(lstm, variant):
+    """Build one draft serving variant from the SAME LSTM weights."""
+    cfg, model, params = lstm
+    calib = jax.random.randint(jax.random.key(9), (2, 8), 0, cfg.vocab_size)
+    if variant == "dense":
+        return DraftModel(model, params)
+    if variant == "packed":
+        plan = lstm_policy(0.6, 0.4, backend="ref").compile(params)
+        pruned, masks = plan.prune(params)
+        packed, _ = plan.pack(pruned, masks)
+        return DraftModel(model, packed)
+    if variant == "delta0":
+        eng = ServeEngine(model, cfg, max_len=MAX_LEN, batch=3,
+                          sparsity=lstm_policy(
+                              0.6, 0.4, backend="ref",
+                              delta=DeltaGateConfig(theta_x=0.0,
+                                                    theta_h=0.0)))
+        dparams, _ = eng.prepare(params)
+        return DraftModel(eng.model, dparams)
+    if variant == "q8":
+        eng = ServeEngine(model, cfg, max_len=MAX_LEN, batch=3,
+                          sparsity=lstm_policy(0.6, 0.4, backend="ref",
+                                               quant=QuantConfig("int8")))
+        dparams, _ = eng.prepare(params, calib=calib)
+        return DraftModel(eng.model, dparams)
+    raise AssertionError(variant)
+
+
+# ---------------------------------------------------------------- sampling
+def test_sample_with_dist_greedy_one_hot():
+    logits = jax.random.normal(jax.random.key(0), (4, 11))
+    ids, dist = sample_with_dist(jax.random.key(1), logits, GREEDY)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.argmax(np.asarray(logits), -1))
+    # greedy distribution is exactly one-hot at the argmax
+    np.testing.assert_array_equal(
+        np.asarray(dist), np.eye(11, dtype=np.float32)[np.asarray(ids)])
+    # and existing callers are unchanged: sample() returns the same ids
+    np.testing.assert_array_equal(
+        np.asarray(sample(jax.random.key(1), logits, GREEDY)),
+        np.asarray(ids))
+
+
+def test_sample_with_dist_temperature():
+    cfg = SamplingConfig(temperature=0.7, top_k=4)
+    logits = jax.random.normal(jax.random.key(0), (5, 16))
+    ids, dist = sample_with_dist(jax.random.key(1), logits, cfg)
+    d = np.asarray(dist)
+    np.testing.assert_allclose(d.sum(-1), 1.0, rtol=1e-5)
+    # top-k filtering: at most k tokens carry mass
+    assert ((d > 1e-9).sum(-1) <= 4).all()
+    # ids are bitwise what the un-split sample() draws with the same key
+    np.testing.assert_array_equal(
+        np.asarray(ids), np.asarray(sample(jax.random.key(1), logits, cfg)))
+    # sampling from the returned distribution lands only on carried mass
+    ids2 = sample_from_dist(jax.random.key(2), dist, cfg)
+    assert (np.take_along_axis(d, np.asarray(ids2)[:, None], -1) > 0).all()
+
+
+def test_sample_from_dist_greedy_argmax():
+    dist = jnp.asarray([[0.1, 0.7, 0.2], [0.5, 0.2, 0.3]])
+    ids = sample_from_dist(jax.random.key(0), dist, GREEDY)
+    np.testing.assert_array_equal(np.asarray(ids), [1, 0])
+
+
+# ---------------------------------------------------------------- accept
+def test_accept_length_stops_at_first_reject():
+    ok = jnp.asarray([[1, 1, 0, 1], [1, 1, 1, 1], [0, 1, 1, 1]], bool)
+    np.testing.assert_array_equal(np.asarray(accept_length(ok)), [2, 4, 0])
+
+
+def test_greedy_accept_counts_argmax_matches():
+    logits = jnp.zeros((1, 3, 5)).at[0, 0, 2].set(1.0).at[0, 1, 4].set(
+        1.0).at[0, 2, 1].set(1.0)
+    # target argmax chain is [2, 4, 1]; draft got the first two right
+    a = greedy_accept(jnp.asarray([[2, 4, 0]]), logits)
+    np.testing.assert_array_equal(np.asarray(a), [2])
+
+
+def test_rejection_accepts_everything_when_q_equals_p():
+    V, k = 7, 4
+    p = jax.nn.softmax(jax.random.normal(jax.random.key(0), (3, k + 1, V)))
+    toks = jnp.argmax(p[:, :k], -1).astype(jnp.int32)
+    a = rejection_accept(jax.random.key(1), toks, p, p[:, :k])
+    np.testing.assert_array_equal(np.asarray(a), [k, k, k])
+
+
+def test_residual_dist_one_hot_reduces_to_target():
+    # greedy one-hots: residual at a rejection is one-hot(target argmax)
+    V = 6
+    p = jax.nn.one_hot(jnp.asarray([[1, 3, 5]]), V)          # (1, 3, V)
+    q = jax.nn.one_hot(jnp.asarray([[1, 2]]), V)             # (1, 2, V)
+    res = residual_dist(p, q, jnp.asarray([1]))              # rejected at 1
+    np.testing.assert_array_equal(np.asarray(res),
+                                  np.asarray(jax.nn.one_hot([3], V)))
+    # full acceptance: the bonus distribution p_k comes back untouched
+    res = residual_dist(p, q, jnp.asarray([2]))
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(p[:, 2]))
+
+
+# ----------------------------------------------------- verify + rewind
+def test_verify_chain_block_bitwise_matches_sequential(lstm):
+    """Chain decomposition: scoring a (B, 3) block in one dispatch is
+    three sequential single-token verifies — same argmax everywhere
+    (the greedy-losslessness carrier) and logits equal to fusion
+    re-association tolerance (XLA compiles different scan trip counts
+    with different fusions, so 1e-9-level drift is expected; the
+    token-stream bitwise tests below are the real invariant)."""
+    cfg, model, params = lstm
+    prompt = jax.random.randint(jax.random.key(1), (3, 5), 0,
+                                cfg.vocab_size)
+    block = jax.random.randint(jax.random.key(2), (3, 3), 0,
+                               cfg.vocab_size)
+    pos = jnp.full((3,), 5, jnp.int32)
+    with use_backend("ref"):
+        _, cache = model.prefill(params, prompt, MAX_LEN)
+        v_logits, _, _ = verify_chain(model, params, cache, block, pos)
+        _, cache = model.prefill(params, prompt, MAX_LEN)
+        seq = []
+        for j in range(3):
+            if j == 2:
+                ref_logits, _ = model.decode_step(params, cache,
+                                                  block[:, 2:], pos + 2)
+            lj, cache, _ = verify_chain(model, params, cache,
+                                        block[:, j:j + 1], pos + j)
+            seq.append(lj[:, 0])
+    seq = np.asarray(jnp.stack(seq, axis=1))
+    got = np.asarray(v_logits)
+    np.testing.assert_allclose(got, seq, atol=1e-6)
+    np.testing.assert_array_equal(got.argmax(-1), seq.argmax(-1))
+    np.testing.assert_allclose(got[:, 2],
+                               np.asarray(ref_logits[:, 0], np.float32),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("family", ["transformer", "hybrid", "lstm"])
+def test_rewind_decode_matches_fresh_from_prefill(family, lstm):
+    """The DecodeStep rewind contract: decode k tokens, roll back, decode
+    DIFFERENT tokens — bitwise the fresh-from-prefill trajectory.
+    Positional (KV) caches rewind by pos alone (entries ≥ pos are dead);
+    recurrent leaves restore from verify_chain checkpoints."""
+    if family == "lstm":
+        cfg, model, params = lstm
+        vocab = cfg.vocab_size
+    else:
+        cfg = smoke_config("qwen3-0.6b" if family == "transformer"
+                           else "recurrentgemma-9b")
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        vocab = cfg.vocab_size
+    B, S = 2, 5
+    prompt = jax.random.randint(jax.random.key(1), (B, S), 0, vocab)
+    A = jax.random.randint(jax.random.key(2), (B, 3), 0, vocab)
+    Bt = jax.random.randint(jax.random.key(3), (B, 3), 0, vocab)
+    pos = jnp.full((B,), S, jnp.int32)
+    with use_backend("ref"):
+        # decode 3 tokens of A, roll all the way back, decode B instead
+        _, cache = model.prefill(params, prompt, MAX_LEN)
+        _, cacheA, states = verify_chain(model, params, cache, A, pos)
+        cache_r = rollback(model, cacheA, states,
+                           jnp.zeros((B,), jnp.int32))
+        got, _, _ = verify_chain(model, params, cache_r, Bt, pos)
+        # the fresh trajectory that never saw A
+        _, cache2 = model.prefill(params, prompt, MAX_LEN)
+        want, _, _ = verify_chain(model, params, cache2, Bt, pos)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+        # partial rewind: keep A's first token, replace the tail
+        _, cache = model.prefill(params, prompt, MAX_LEN)
+        _, cacheA, states = verify_chain(model, params, cache, A, pos)
+        cache_r = rollback(model, cacheA, states,
+                           jnp.ones((B,), jnp.int32))
+        got, _, _ = verify_chain(model, params, cache_r, Bt, pos + 1)
+        _, cache2 = model.prefill(params, prompt, MAX_LEN)
+        want, _, _ = verify_chain(
+            model, params, cache2,
+            jnp.concatenate([A[:, :1], Bt], axis=1), pos)
+        # different scan trip counts (3 vs 4) re-associate fusions, so
+        # argmax-bitwise + tight allclose rather than float-bitwise here
+        g, w = np.asarray(got), np.asarray(want[:, 1:])
+        np.testing.assert_allclose(g, w, atol=1e-5)
+        np.testing.assert_array_equal(g.argmax(-1), w.argmax(-1))
+
+
+# ------------------------------------------------------------ losslessness
+@pytest.mark.parametrize("variant", ["dense", "packed", "delta0", "q8"])
+@pytest.mark.parametrize("k", [1, 4, 8])
+def test_greedy_spec_is_bitwise_lossless(lstm, variant, k):
+    cfg, model, params = lstm
+    prompt = jax.random.randint(jax.random.key(1), (3, 7), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        eng = ServeEngine(model, cfg, max_len=MAX_LEN, batch=3)
+        base = np.asarray(eng.generate(params, prompt, 8))
+        draft = _draft(lstm, variant)
+        spec = np.asarray(eng.generate(params, prompt, 8, draft=draft,
+                                       spec_k=k))
+    np.testing.assert_array_equal(base, spec)
+
+
+def test_greedy_spec_lossless_with_eos(lstm):
+    """EOS/pad emission discipline matches decode_loop exactly: pick an
+    eos id the greedy continuation actually emits mid-stream."""
+    cfg, model, params = lstm
+    prompt = jax.random.randint(jax.random.key(1), (3, 7), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        eng = ServeEngine(model, cfg, max_len=MAX_LEN, batch=3)
+        free = np.asarray(eng.generate(params, prompt, 8))
+        samp = SamplingConfig(eos_id=int(free[0, 2]))
+        base = np.asarray(eng.generate(params, prompt, 8, sampling=samp))
+        draft = _draft(lstm, "packed")
+        spec = np.asarray(eng.generate(params, prompt, 8, sampling=samp,
+                                       draft=draft, spec_k=4))
+    assert (base[0] == samp.pad_id).any()      # the eos actually fired
+    np.testing.assert_array_equal(base, spec)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "rwkv6-7b"])
+def test_greedy_spec_lossless_transformer_target(arch, lstm):
+    """Cross-family: a recurrent LSTM draft speculating for a KV-cache
+    transformer / RWKV target, rollback by pos-rewind + checkpoints."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    dcfg = LSTMConfig("d", input_size=16, hidden=32, num_layers=1,
+                      vocab_size=cfg.vocab_size)
+    dmodel = LSTMModel(dcfg)
+    draft = DraftModel(dmodel, dmodel.init(jax.random.key(1)))
+    prompt = jax.random.randint(jax.random.key(2), (2, 5), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        eng = ServeEngine(model, cfg, max_len=32, batch=2)
+        base = np.asarray(eng.generate(params, prompt, 6))
+        spec = np.asarray(eng.generate(params, prompt, 6, draft=draft,
+                                       spec_k=3))
+    np.testing.assert_array_equal(base, spec)
+
+
+def test_greedy_spec_lossless_through_scheduler(lstm):
+    """Continuous batching with per-slot draft state: ragged prompts,
+    chunked rounds, joins and evictions — token streams bitwise match the
+    draft-free scheduler."""
+    cfg, model, params = lstm
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+               for n in (5, 3, 9, 6, 4)]
+
+    def run(draft):
+        with use_backend("ref"):
+            eng = ContinuousBatchingEngine(
+                model, params, slots=3, max_len=32, chunk=4,
+                sampling=GREEDY, draft=draft, spec_k=3)
+            for p in prompts:
+                eng.submit(p, 10)
+            return eng.run(), eng.spec_stats()
+
+    base, none_stats = run(None)
+    spec, stats = run(_draft(lstm, "packed"))
+    assert none_stats is None
+    assert set(base) == set(spec)
+    for uid in base:
+        np.testing.assert_array_equal(base[uid], spec[uid])
+    assert stats["drafted"] > 0 and stats["rounds"] > 0
+    assert 0.0 <= stats["acceptance_rate"] <= 1.0
+
+
+def test_spec_acceptance_accounting(lstm):
+    """A draft sharing the target's exact weights accepts everything:
+    acceptance-rate 1 and one round per k+1 tokens."""
+    cfg, model, params = lstm
+    prompt = jax.random.randint(jax.random.key(1), (2, 7), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        eng = ServeEngine(model, cfg, max_len=MAX_LEN, batch=2)
+        draft = DraftModel(model, params)          # the target itself
+        toks, st = eng.generate(params, prompt, 8, draft=draft, spec_k=3,
+                                return_state=True, rng=jax.random.key(5))
+    drafted = np.asarray(st["drafted"])
+    accepted = np.asarray(st["accepted"])
+    np.testing.assert_array_equal(accepted,
+                                  np.minimum(drafted, accepted))
+    # every proposal that had room to commit was accepted (8 steps = two
+    # full rounds of 1+3 committed tokens each)
+    np.testing.assert_array_equal(np.asarray(st["rounds"]), [2, 2])
+    np.testing.assert_array_equal(np.asarray(st["emitted"]), [8, 8])
+    np.testing.assert_array_equal(accepted, [6, 6])
+
+
+def test_temperature_spec_decodes_valid_tokens(lstm):
+    """The rejection-sampling path: not bitwise (different rng consumption
+    than decode_loop) but shape/vocab/accounting-sound."""
+    cfg, model, params = lstm
+    prompt = jax.random.randint(jax.random.key(1), (3, 7), 0,
+                                cfg.vocab_size)
+    samp = SamplingConfig(temperature=0.8, top_k=10)
+    with use_backend("ref"):
+        eng = ServeEngine(model, cfg, max_len=MAX_LEN, batch=3)
+        draft = _draft(lstm, "packed")
+        toks, st = eng.generate(params, prompt, 8, sampling=samp,
+                                draft=draft, spec_k=4, return_state=True,
+                                rng=jax.random.key(6))
+    t = np.asarray(toks)
+    assert t.shape == (3, 8)
+    assert ((t >= 0) & (t < cfg.vocab_size)).all()
+    assert (np.asarray(st["emitted"]) == 8).all()
+    a = np.asarray(st["accepted"])
+    assert (a >= 0).all() and (a <= np.asarray(st["drafted"])).all()
+
+
+# ------------------------------------------------------------------ draft
+def test_draft_rejects_positional_cache_model():
+    cfg = smoke_config("qwen3-0.6b")
+    model = build_model(cfg)
+    with pytest.raises(TypeError, match="positional"):
+        DraftModel(model, None)
+
+
+def test_draft_scan_prefill_matches_stepwise_state(lstm):
+    """The fused multi-token scan prefill primes the same (c, h) state as
+    the model's own masked prefill (same packed ref kernels → bitwise on
+    the ref backend)."""
+    cfg, model, params = lstm
+    plan = lstm_policy(0.6, 0.4, backend="ref").compile(params)
+    pruned, masks = plan.prune(params)
+    packed, _ = plan.pack(pruned, masks)
+    prompt = jax.random.randint(jax.random.key(1), (3, 7), 0,
+                                cfg.vocab_size)
+    with use_backend("ref"):
+        draft = DraftModel(model, packed, scan_prefill=True)
+        l_scan, s_scan = draft.prefill(packed, prompt, MAX_LEN)
+        l_ref, s_ref = model.prefill(packed, prompt, MAX_LEN)
+    for got, want in zip(jax.tree.leaves(s_scan), jax.tree.leaves(s_ref)):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l_scan), np.asarray(l_ref),
+                               atol=1e-4)
