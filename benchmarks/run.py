@@ -16,14 +16,14 @@ from . import common
 
 def main() -> None:
     from . import decode_throughput, fig4_dual_ratio, fig9_patterns, \
-        fig_delta_occupancy, fig_quant_tradeoff, pipeline, spec, \
+        fig_delta_occupancy, fig_quant_tradeoff, obs, pipeline, spec, \
         table1_resources, table2_throughput, traffic
     out_dir = os.environ.get("REPRO_BENCH_DIR", ".")
     os.makedirs(out_dir, exist_ok=True)
     print("name,us_per_call,derived")
     for mod in (table1_resources, table2_throughput, decode_throughput,
                 fig9_patterns, fig4_dual_ratio, fig_delta_occupancy,
-                fig_quant_tradeoff, traffic, pipeline, spec):
+                fig_quant_tradeoff, traffic, pipeline, spec, obs):
         common.drain_records()
         t0 = time.time()
         mod.main()

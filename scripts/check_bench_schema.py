@@ -35,6 +35,15 @@ the records downstream tooling reads:
       acceptance_rate, accepted_per_round, toks_per_s, speedup, k
     - exactly one spec_draft_cost row with draft_toks_per_s + cost_ratio
 
+  BENCH_obs.json
+    - the obs_overhead_disabled / obs_overhead_enabled pair, each with
+      toks_per_s; the enabled row carries overhead_pct (the ≤5% target)
+    - exactly one obs_counter_parity row with fired_match == 1 and
+      spec_match == 1 — the on-device counters equal the offline
+      reductions exactly
+    - exactly one obs_scorecard row with effective_gops,
+      bound_effective_gops, bytes_per_token
+
   every BENCH_*.json
     - top-level benchmark/smoke/wall_time_s/rows keys, rows a list of
       dicts each with name + us_per_call
@@ -166,12 +175,37 @@ def check_spec(path, payload):
             fail(f"{path}: spec_draft_cost missing {k!r}")
 
 
+def check_obs(path, payload):
+    rows = {r["name"]: r for r in payload["rows"]}
+    for name in ("obs_overhead_disabled", "obs_overhead_enabled"):
+        if name not in rows:
+            fail(f"{path}: missing {name} row")
+        if "toks_per_s" not in rows[name]:
+            fail(f"{path}: {name} missing toks_per_s")
+    if "overhead_pct" not in rows["obs_overhead_enabled"]:
+        fail(f"{path}: obs_overhead_enabled missing overhead_pct column")
+    if "obs_counter_parity" not in rows:
+        fail(f"{path}: missing obs_counter_parity row")
+    parity = rows["obs_counter_parity"]
+    if parity.get("fired_match") != 1:
+        fail(f"{path}: on-device fired-column counters diverged from the "
+             f"offline occupancy_report reduction: {parity}")
+    if parity.get("spec_match") != 1:
+        fail(f"{path}: on-device spec counters diverged from "
+             f"spec_stats(): {parity}")
+    if "obs_scorecard" not in rows:
+        fail(f"{path}: missing obs_scorecard row")
+    for k in ("effective_gops", "bound_effective_gops", "bytes_per_token"):
+        if k not in rows["obs_scorecard"]:
+            fail(f"{path}: obs_scorecard missing {k!r}")
+
+
 def main():
     out_dir = sys.argv[1] if len(sys.argv) > 1 else "."
     paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
     if not paths:
         fail(f"no BENCH_*.json found in {out_dir!r}")
-    saw_traffic = saw_decode = saw_pipeline = saw_spec = False
+    saw_traffic = saw_decode = saw_pipeline = saw_spec = saw_obs = False
     for path in paths:
         with open(path) as f:
             payload = json.load(f)
@@ -188,6 +222,9 @@ def main():
         if payload["benchmark"] == "spec":
             check_spec(path, payload)
             saw_spec = True
+        if payload["benchmark"] == "obs":
+            check_obs(path, payload)
+            saw_obs = True
     if not saw_traffic:
         fail("BENCH_traffic.json not produced (traffic module not "
              "registered in benchmarks/run.py?)")
@@ -200,8 +237,11 @@ def main():
     if not saw_spec:
         fail("BENCH_spec.json not produced (spec module not registered "
              "in benchmarks/run.py?)")
+    if not saw_obs:
+        fail("BENCH_obs.json not produced (obs module not registered "
+             "in benchmarks/run.py?)")
     print(f"check_bench_schema: OK ({len(paths)} files, traffic + decode "
-          "+ pipeline + spec schemas verified)")
+          "+ pipeline + spec + obs schemas verified)")
 
 
 if __name__ == "__main__":

@@ -1,53 +1,14 @@
 """Print the top collective contributors (wire bytes × loop multiplicity)
-for one dry-run cell. Usage:
+for one dry-run cell — thin CLI over ``repro.obs.collectives.top``. Usage:
   XLA_FLAGS=--xla_force_host_platform_device_count=512 \
   PYTHONPATH=src python scripts/top_collectives.py <arch> <shape> [multi]
 """
 import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=512")
-import re
 import sys
 
-from repro.launch.dryrun import build_cell
-from repro import roofline
-
-
-def top(arch, shape, multi=False, n=10, overrides=None):
-    lowered, n_dev, aux = build_cell(arch, shape, multi, overrides)
-    text = lowered.compile().as_text()
-    comps = roofline.parse_hlo(text)
-    ename = re.match(r"ENTRY\s+%?([\w\.\-]+)",
-                     [l for l in text.splitlines()
-                      if l.startswith("ENTRY")][0]).group(1)
-    mult = roofline.multiplicities(comps, ename)
-    items = []
-    for name, comp in comps.items():
-        m = mult.get(name, 0)
-        if m <= 0:
-            continue
-        for line in comp.lines:
-            mo = roofline._OP_DEF.match(line)
-            if not mo:
-                continue
-            kind = mo.group(3)
-            if kind.endswith("-start"):
-                kind = kind[:-6]
-            if kind not in roofline._COLL_KINDS:
-                continue
-            size = roofline.shape_bytes(mo.group(2))
-            meta = re.search(r'op_name="([^"]*)"', line)
-            items.append((m * size, m, size, kind,
-                          meta.group(1)[-90:] if meta else line.strip()[:90]))
-    items.sort(reverse=True)
-    total = sum(i[0] for i in items)
-    print(f"total payload×mult: {total:.3e} bytes/chip "
-          f"(~{total/50e9*1e3:.0f} ms at ICI)")
-    for it in items[:n]:
-        print(f"{it[0]:.2e}  mult={it[1]:5.0f} size={it[2]:.2e} {it[3]:13s} "
-              f"{it[4]}")
-    return items
-
+from repro.obs.collectives import top
 
 if __name__ == "__main__":
     arch, shape = sys.argv[1], sys.argv[2]

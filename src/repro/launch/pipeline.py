@@ -331,11 +331,13 @@ def run_pipeline(cfg: PipelineConfig, *, smoke: bool = False,
         corpus.batch(1 << 41, cfg.eval_batch, cfg.eval_seq))["inputs"]
     gen_raw = corpus.batch(1 << 42, max(cfg.gen_batch, 1), cfg.eval_seq)
 
+    from ..obs import trace as obs_trace
     log(f"[1/4] train dense: corpus={cfg.corpus} H={cfg.hidden} "
         f"L={cfg.num_layers} steps={cfg.train_steps}")
-    dense_params, loss = train_lstm(model, corpus, cfg,
-                                    steps=cfg.train_steps, lr=cfg.lr,
-                                    mesh=mesh, log=log)
+    with obs_trace.span("pipeline.train_dense", steps=cfg.train_steps):
+        dense_params, loss = train_lstm(model, corpus, cfg,
+                                        steps=cfg.train_steps, lr=cfg.lr,
+                                        mesh=mesh, log=log)
     dense = evaluate(model, dense_params, eval_set)
     log(f"      dense eval: ppl {dense['ppl']:.4f}"
         + (f" acc {dense['acc']:.3f}" if "acc" in dense else ""))
@@ -351,18 +353,23 @@ def run_pipeline(cfg: PipelineConfig, *, smoke: bool = False,
     for gi, (spar_x, spar_h) in enumerate(cfg.spar_grid):
         log(f"[2/4] prune+retrain (Spar_x={spar_x}, Spar_h={spar_h}) "
             f"steps={cfg.retrain_steps}")
-        plan = _policy_at(cfg, spar_x, spar_h, None, 0.0).compile(
-            dense_params)
-        pruned, masks = plan.prune(dense_params)
-        retrained, _ = train_lstm(model, corpus, cfg,
-                                  steps=cfg.retrain_steps,
-                                  lr=cfg.retrain_lr, params=pruned,
-                                  masks=masks, mesh=mesh, log=log)
+        with obs_trace.span("pipeline.prune_retrain", spar_x=spar_x,
+                            spar_h=spar_h, steps=cfg.retrain_steps):
+            plan = _policy_at(cfg, spar_x, spar_h, None, 0.0).compile(
+                dense_params)
+            pruned, masks = plan.prune(dense_params)
+            retrained, _ = train_lstm(model, corpus, cfg,
+                                      steps=cfg.retrain_steps,
+                                      lr=cfg.retrain_lr, params=pruned,
+                                      masks=masks, mesh=mesh, log=log)
         for scheme in (None, cfg.quant):
             for theta in (0.0, cfg.theta):
-                point = run_point(model, lcfg, retrained, cfg, spar_x,
-                                  spar_h, scheme, theta, eval_set, calib,
-                                  gen_raw)
+                with obs_trace.span("pipeline.run_point", spar_x=spar_x,
+                                    spar_h=spar_h, theta=theta,
+                                    scheme=scheme or "fp32"):
+                    point = run_point(model, lcfg, retrained, cfg, spar_x,
+                                      spar_h, scheme, theta, eval_set,
+                                      calib, gen_raw)
                 parity_points += 1
                 met = point["metrics"]
                 delta_pct = 100.0 * (met["ppl"] - dense["ppl"]) / dense["ppl"]
@@ -471,6 +478,9 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None,
                     help="BENCH_pipeline.json directory (default "
                          "$REPRO_BENCH_DIR or cwd)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a Chrome-trace of the pipeline phases "
+                         "(repro.obs spans) to FILE")
     args = ap.parse_args(argv)
 
     overrides: dict[str, Any] = {"corpus": args.corpus, "seed": args.seed,
@@ -500,7 +510,14 @@ def main(argv=None) -> int:
         overrides["mesh"] = (d, m)
     cfg = PipelineConfig(**overrides)
 
+    if args.trace:
+        from ..obs import trace as obs_trace
+        obs_trace.enable()
     payload = run_pipeline(cfg, smoke=args.smoke)
+    if args.trace:
+        obs_trace.save(args.trace)
+        print(f"trace: {args.trace} "
+              f"({len(obs_trace.get_tracer().events)} events)")
     path = write_bench(payload, args.out)
     print(f"wrote {path} ({len(payload['rows'])} rows)")
     gate = payload["gate"]

@@ -70,6 +70,9 @@ def _build(args):
         return (LSTMModel(cfg, fused=args.fused), cfg, cfg.vocab_size,
                 sparsity, lambda rng, batch: None)
 
+    if args.scorecard:
+        raise SystemExit("--scorecard is LSTM-only (its MAC/byte ledger "
+                         "covers the recurrent cell — repro.obs.scorecard)")
     if args.delta is not None:
         raise SystemExit("--delta is LSTM-only (temporal sparsity rides "
                          "the recurrent decode cache)")
@@ -138,6 +141,33 @@ def _build_draft(args, vocab: int, max_len: int, batch: int):
     if report is not None:
         print("draft BRDS:", report)
     return DraftModel(deng.model, dparams)
+
+
+def _obs_outputs(args, params, counters, wall_s, *, batch, step_sum=None,
+                 records=None, summary=None, spec=None, extra_gauges=None):
+    """--scorecard / --metrics / --trace outputs, shared by the lockstep,
+    --continuous, and --traffic paths (repro.obs)."""
+    if args.scorecard and counters is not None:
+        from repro.obs import scorecard as obs_scorecard
+        card = obs_scorecard.build(params, counters, wall_s, batch=batch,
+                                   step_sum=step_sum)
+        print(obs_scorecard.render(card))
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+        reg = MetricsRegistry()
+        if records is not None:
+            reg.absorb_traffic(records, summary)
+        reg.absorb_spec(spec)
+        reg.absorb_counters(counters)
+        for name, val in (extra_gauges or {}).items():
+            reg.gauge(name).set(val)
+        reg.dump(args.metrics)
+        print(f"metrics -> {args.metrics}")
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.save(args.trace)
+        print(f"trace -> {args.trace} "
+              f"({len(obs_trace.get_tracer().events)} events)")
 
 
 def main():
@@ -232,6 +262,17 @@ def main():
     ap.add_argument("--draft-quant", default=None, metavar="SCHEME",
                     help="draft with quantized packed weights ('int8' or "
                          "'qM.N'); requires --draft-brds")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="record a Chrome-trace (Perfetto-loadable JSON) of "
+                         "engine/scheduler spans to FILE (repro.obs.trace)")
+    ap.add_argument("--metrics", default=None, metavar="FILE",
+                    help="dump a metrics snapshot to FILE — Prometheus "
+                         "text, or JSON when FILE ends in .json "
+                         "(repro.obs.metrics)")
+    ap.add_argument("--scorecard", action="store_true",
+                    help="LSTM only: print the effective-GOPS scorecard — "
+                         "harvested on-device counters against the decode "
+                         "roofline (repro.obs.scorecard)")
     args = ap.parse_args()
 
     from repro.serving import (ServeEngine, ContinuousBatchingEngine,
@@ -239,6 +280,11 @@ def main():
     from repro.sparse import set_default_backend
 
     set_default_backend(args.backend)
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        obs_trace.enable()
+    # counters ride the decode dispatches only when an obs output wants them
+    want_counters = args.scorecard or args.metrics is not None
     mesh = None
     if args.mesh is not None:
         from repro.launch.mesh import make_host_mesh
@@ -290,7 +336,7 @@ def main():
             eng.model, params, slots=args.slots, max_len=max_len,
             sampling=sampling, dispatch_depth=args.dispatch_depth,
             mesh=mesh if eng._dist else None, draft=draft,
-            spec_k=args.spec_k)
+            spec_k=args.spec_k, counters=want_counters)
         short_hi = max(5, args.prompt_len // 4)
         long_hi = max(short_hi + 1, args.prompt_len)
         lc = LoadConfig(rate=args.rate, num_requests=args.requests,
@@ -309,11 +355,12 @@ def main():
               f"expired={summary['expired']} rejected={summary['rejected']} "
               f"({summary['tokens']} tokens, {summary['wall_s']:.2f}s wall, "
               f"{sched.steps_dispatched} chunk dispatches)")
-        print(f"TTFT ms: p50={summary['p50_ttft_ms']:.1f} "
-              f"p90={summary['p90_ttft_ms']:.1f} "
-              f"p99={summary['p99_ttft_ms']:.1f}")
-        print(f"TPOT ms: p50={summary['p50_tpot_ms']:.2f} "
-              f"p99={summary['p99_tpot_ms']:.2f}")
+        ms = lambda v: "n/a" if v is None else f"{v:.2f}"
+        print(f"TTFT ms: p50={ms(summary['p50_ttft_ms'])} "
+              f"p90={ms(summary['p90_ttft_ms'])} "
+              f"p99={ms(summary['p99_ttft_ms'])}")
+        print(f"TPOT ms: p50={ms(summary['p50_tpot_ms'])} "
+              f"p99={ms(summary['p99_tpot_ms'])}")
         print(f"goodput: {summary['goodput_tps']:.1f} tok/s "
               f"(total {summary['toks_per_s']:.1f} tok/s)")
         if draft is not None:
@@ -321,6 +368,13 @@ def main():
             print(f"spec: acceptance={st['acceptance_rate']:.1%} "
                   f"({st['accepted']}/{st['drafted']} drafted over "
                   f"{st['rounds']} rounds)")
+        _obs_outputs(
+            args, params, sched.counters() if want_counters else None,
+            summary["wall_s"], batch=args.slots,
+            step_sum=float(np.sum(sched.slot_steps))
+            if args.delta is not None else None,
+            records=records, summary=summary,
+            spec=sched.spec_stats() if draft is not None else None)
         return
 
     if args.continuous:
@@ -330,7 +384,8 @@ def main():
         sched = ContinuousBatchingEngine(eng.model, params, slots=args.slots,
                                          max_len=max_len, sampling=sampling,
                                          mesh=mesh if eng._dist else None,
-                                         draft=draft, spec_k=args.spec_k)
+                                         draft=draft, spec_k=args.spec_k,
+                                         counters=want_counters)
         lens = [max(4, args.prompt_len - 3 * i) for i in range(args.batch)]
         for i, plen in enumerate(lens):
             req_rng = jax.random.fold_in(rng, i)
@@ -359,6 +414,13 @@ def main():
                 line += (f", effective-ops reduction "
                          f"{occ['ops_reduction']:.2f}x")
             print(line + " (final slot residents)")
+        _obs_outputs(
+            args, params, sched.counters() if want_counters else None,
+            dt, batch=args.slots,
+            step_sum=float(np.sum(sched.slot_steps))
+            if args.delta is not None else None,
+            spec=sched.spec_stats() if draft is not None else None,
+            extra_gauges={"serve_toks_per_s": total / dt})
         uid0 = min(results)
         print("sample ids:", results[uid0][:16])
         return
@@ -374,10 +436,13 @@ def main():
     dt = time.time() - t0
     print(f"generated {out.shape} in {dt:.2f}s "
           f"({args.batch * args.gen / dt:.1f} tok/s, one decode dispatch)")
+    spec = None
     if draft is not None:
         drafted = int(np.sum(np.asarray(state["drafted"])))
         accepted = int(np.sum(np.asarray(state["accepted"])))
         rounds = int(np.sum(np.asarray(state["rounds"])))
+        spec = dict(rounds=rounds, drafted=drafted, accepted=accepted,
+                    acceptance_rate=accepted / max(drafted, 1))
         print(f"spec: acceptance={accepted / max(drafted, 1):.1%} "
               f"({accepted}/{drafted} drafted over {rounds} rounds)")
     if args.delta is not None:
@@ -390,6 +455,16 @@ def main():
         if "ops_reduction" in occ:
             line += f", effective-ops reduction {occ['ops_reduction']:.2f}x"
         print(line)
+    c = None
+    if want_counters:
+        from repro.obs import counters as obs_counters
+        c = obs_counters.from_state(eng.model, state, steps=args.gen)
+    _obs_outputs(
+        args, params, c, dt, batch=args.batch,
+        step_sum=float(args.batch * (args.prompt_len + args.gen))
+        if args.delta is not None else None,
+        spec=spec, extra_gauges={"serve_toks_per_s":
+                                 args.batch * args.gen / dt})
     print("sample ids:", np.asarray(out[0][:16]))
 
 

@@ -1,0 +1,40 @@
+"""repro.obs — observability for the serving stack.
+
+Four layers, one goal: make the paper's efficiency claims measurable
+*per serve run*, not just per offline benchmark:
+
+- ``trace``: host-side span tracer (Chrome-trace/Perfetto export) with a
+  near-zero-cost disabled path, instrumented across ServeEngine, the
+  continuous-batching scheduler, repro.spec, and launch.pipeline.
+- ``counters``: on-device counter vector (delta fired columns, spec
+  acceptance, decode steps, emitted tokens) threaded through the
+  scheduler's chained chunk dispatches and harvested at its EXISTING
+  host syncs — no extra device→host transfers.
+- ``metrics``: counter/gauge/histogram registry with Prometheus-text and
+  JSON dumps, absorbing traffic records, spec stats, and device counters.
+- ``scorecard``: achieved vs. roofline-bound effective GOPS and
+  bytes/token, joining harvested counters with ``repro.roofline``.
+- ``collectives``: per-step collective inventory for repro.dist meshes
+  (the one-all-gather-per-layer-per-step claim, measured).
+"""
+import importlib
+
+__all__ = ["collectives", "counters", "metrics", "scorecard", "trace",
+           "MetricsRegistry", "enable_tracing", "span", "traced"]
+
+_LAZY = {"MetricsRegistry": ("metrics", "MetricsRegistry"),
+         "enable_tracing": ("trace", "enable"),
+         "span": ("trace", "span"),
+         "traced": ("trace", "traced")}
+_SUBMODULES = ("collectives", "counters", "metrics", "scorecard", "trace")
+
+
+def __getattr__(name):
+    # lazy: the scheduler imports this package on every serve, and
+    # ``python -m repro.obs.trace`` must not double-import its own module
+    if name in _SUBMODULES:
+        return importlib.import_module("." + name, __name__)
+    if name in _LAZY:
+        mod, attr = _LAZY[name]
+        return getattr(importlib.import_module("." + mod, __name__), attr)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,103 @@
+"""Per-step collective inventory for sharded serving (repro.dist meshes).
+
+``repro.dist`` claims exactly one collective per decode step and layer —
+the all-gather of the sharded hidden state h over the ``model`` axis
+(docs/architecture.md, "one all-gather per layer per step"). This module
+makes that claim *measurable*: compile any jitted step and read the
+collectives actually present in its HLO, loop-multiplicity-weighted, via
+``roofline.py``'s HLO parser. ``tests/test_obs.py`` pins the claim on 8
+forced host devices; ``launch.pipeline``-scale dry-run cells keep the
+original top-contributor report (``top``; ``scripts/top_collectives.py``
+stays as a thin CLI shim).
+"""
+from __future__ import annotations
+
+import re
+
+from .. import roofline
+
+__all__ = ["inventory_from_text", "inventory", "decode_step_inventory",
+           "summarize_inventory", "top"]
+
+
+def _entry_name(text: str) -> str:
+    entry = [l for l in text.splitlines() if l.startswith("ENTRY")]
+    if not entry:
+        raise ValueError("no ENTRY computation in HLO text")
+    return re.match(r"ENTRY\s+%?([\w\.\-]+)", entry[0]).group(1)
+
+
+def inventory_from_text(text: str) -> list[dict]:
+    """Collectives in compiled HLO text, one record per op site:
+    ``kind`` (start-suffix folded), ``mult`` (loop multiplicity from the
+    entry computation), ``bytes`` (result payload), ``wire_bytes``
+    (bytes × mult), ``where`` (op_name metadata when present).
+    Multiplicity-0 sites (dead computations) are dropped."""
+    comps = roofline.parse_hlo(text)
+    mult = roofline.multiplicities(comps, _entry_name(text))
+    items = []
+    for name, comp in comps.items():
+        m = mult.get(name, 0)
+        if m <= 0:
+            continue
+        for line in comp.lines:
+            mo = roofline._OP_DEF.match(line)
+            if not mo:
+                continue
+            kind = mo.group(3)
+            if kind.endswith("-start"):
+                kind = kind[:-6]
+            if kind not in roofline._COLL_KINDS:
+                continue
+            size = roofline.shape_bytes(mo.group(2))
+            meta = re.search(r'op_name="([^"]*)"', line)
+            items.append({"kind": kind, "mult": m, "bytes": size,
+                          "wire_bytes": m * size,
+                          "where": meta.group(1) if meta else
+                          line.strip()[:120]})
+    items.sort(key=lambda it: -it["wire_bytes"])
+    return items
+
+
+def inventory(fn_or_lowered, *args, **kwargs) -> list[dict]:
+    """Collective inventory of a step function: pass a callable (jitted
+    or not — it is lowered on the given example args) or an
+    already-``jax.jit(...).lower(...)``ed object."""
+    import jax
+    lowered = fn_or_lowered
+    if callable(fn_or_lowered):
+        lowered = jax.jit(fn_or_lowered).lower(*args, **kwargs)
+    return inventory_from_text(lowered.compile().as_text())
+
+
+def decode_step_inventory(model, params, cache, tokens, pos) -> list[dict]:
+    """Inventory of ONE ``model.decode_step`` dispatch — the per-step
+    collective bill a sharded decode pays every token."""
+    return inventory(lambda p, c, t, x: model.decode_step(p, c, t, x),
+                     params, cache, tokens, pos)
+
+
+def summarize_inventory(items: list[dict]) -> dict:
+    """{kind: mult-weighted count} plus ``wire_bytes`` total — the shape
+    tests assert on (e.g. exactly ``num_layers`` all-gathers per step)."""
+    by_kind: dict[str, int] = {}
+    for it in items:
+        by_kind[it["kind"]] = by_kind.get(it["kind"], 0) + it["mult"]
+    return {"counts": by_kind,
+            "wire_bytes": sum(it["wire_bytes"] for it in items)}
+
+
+def top(arch, shape, multi=False, n=10, overrides=None):
+    """Print the top collective contributors (wire bytes × multiplicity)
+    for one ``launch.dryrun`` cell; returns the inventory records."""
+    from ..launch.dryrun import build_cell
+    lowered, n_dev, aux = build_cell(arch, shape, multi, overrides)
+    items = inventory_from_text(lowered.compile().as_text())
+    total = sum(it["wire_bytes"] for it in items)
+    print(f"total payload×mult: {total:.3e} bytes/chip "
+          f"(~{total / 50e9 * 1e3:.0f} ms at ICI)")
+    for it in items[:n]:
+        print(f"{it['wire_bytes']:.2e}  mult={it['mult']:5.0f} "
+              f"size={it['bytes']:.2e} {it['kind']:13s} "
+              f"{it['where'][-90:]}")
+    return items

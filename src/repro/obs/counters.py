@@ -1,0 +1,129 @@
+"""On-device serving counters — accumulated in-graph, harvested at the
+scheduler's existing host syncs.
+
+The serving stack already keeps every per-token quantity the paper's
+efficiency claims need ON DEVICE: the temporal-delta cache accumulates
+fired-column counts (``nx``/``nh`` per layer), the speculative loop
+returns per-row ``rounds``/``drafted``/``accepted``, and ``decode_loop``
+counts emitted tokens. This module folds them into ONE small
+device-resident vector (a named slot layout, ``counter_names``) that the
+scheduler threads through its chained chunk dispatches exactly like
+``done``/``budget``:
+
+- accumulation happens inside the already-jitted chunk function (pure
+  extra adds — no new dispatches);
+- the vector rides the ``DispatchQueue`` next to each chunk's token
+  future and is read on the host at the chunk's EXISTING harvest sync,
+  so instrumentation adds **no extra device→host transfers** and no new
+  sync points.
+
+Slot semantics (all float32 — exact integers up to 2^24, plenty for
+bench/serve runs; the delta cache's own ``nx``/``nh`` are float32
+already):
+
+- ``decode_steps``, ``tokens``, ``spec_rounds``, ``spec_drafted``,
+  ``spec_accepted`` are per-chunk deltas summed over the run (counters);
+- ``fired_x_l{i}`` / ``fired_h_l{i}`` are GAUGES: the current cache's
+  cumulative fired-column sums, re-read at each chunk exit. At drain
+  they equal exactly what ``occupancy_report`` recomputes offline from
+  the same cache (the parity invariant ``tests/test_obs.py`` pins).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BASE_COUNTERS", "counter_names", "zeros", "chunk_update",
+           "harvest", "from_state", "fired_totals"]
+
+BASE_COUNTERS = ("decode_steps", "tokens", "spec_rounds", "spec_drafted",
+                 "spec_accepted")
+
+
+def _num_delta_layers(model) -> int:
+    if getattr(model, "delta", None) is None:
+        return 0
+    return getattr(getattr(model, "cfg", None), "num_layers", 0)
+
+
+def counter_names(model) -> tuple:
+    """Slot layout for ``model``: the base counters plus one
+    ``fired_x_l{i}``/``fired_h_l{i}`` gauge pair per delta-gated layer."""
+    names = list(BASE_COUNTERS)
+    for i in range(_num_delta_layers(model)):
+        names += [f"fired_x_l{i}", f"fired_h_l{i}"]
+    return tuple(names)
+
+
+def zeros(names):
+    return jnp.zeros((len(names),), jnp.float32)
+
+
+def chunk_update(names, counters, st, steps: int):
+    """Fold one decode chunk's returned state into the counter vector
+    (runs inside the scheduler's jitted chunk fn — device-only).
+
+    ``st`` is the decode/spec loop state: ``emitted`` (B,) always;
+    ``rounds``/``drafted``/``accepted`` (B,) on spec chunks; ``cache``
+    carrying per-layer ``nx``/``nh`` when the model is delta-gated.
+    """
+    idx = {n: i for i, n in enumerate(names)}
+    c = counters
+    c = c.at[idx["decode_steps"]].add(jnp.float32(steps))
+    c = c.at[idx["tokens"]].add(
+        jnp.sum(st["emitted"]).astype(jnp.float32))
+    for key, slot in (("rounds", "spec_rounds"), ("drafted", "spec_drafted"),
+                      ("accepted", "spec_accepted")):
+        if key in st:
+            c = c.at[idx[slot]].add(jnp.sum(st[key]).astype(jnp.float32))
+    if "fired_x_l0" in idx:
+        for i, lp in enumerate(st["cache"]["layers"]):
+            c = c.at[idx[f"fired_x_l{i}"]].set(
+                jnp.sum(lp["nx"]).astype(jnp.float32))
+            c = c.at[idx[f"fired_h_l{i}"]].set(
+                jnp.sum(lp["nh"]).astype(jnp.float32))
+    return c
+
+
+def harvest(names, values) -> dict:
+    """Counter vector → {name: float} on the host.
+
+    The caller controls WHEN this runs: the scheduler calls it on the
+    vector snapshot riding an already-harvested chunk (the value is by
+    then host-materialized alongside the chunk's tokens — no extra
+    sync point).
+    """
+    vals = np.asarray(values, np.float64)
+    return {n: float(v) for n, v in zip(names, vals)}
+
+
+def from_state(model, state, *, steps: int) -> dict:
+    """Counters for a LOCKSTEP ``ServeEngine.generate`` run, read from the
+    decode loop's final state (``return_state=True``) — one host read of
+    quantities the run already produced, no in-loop instrumentation.
+    """
+    names = counter_names(model)
+    out = dict.fromkeys(names, 0.0)
+    out["decode_steps"] = float(steps)
+    out["tokens"] = float(np.sum(np.asarray(state["emitted"])))
+    for key, slot in (("rounds", "spec_rounds"), ("drafted", "spec_drafted"),
+                      ("accepted", "spec_accepted")):
+        if key in state:
+            out[slot] = float(np.sum(np.asarray(state[key])))
+    if _num_delta_layers(model):
+        for i, lp in enumerate(state["cache"]["layers"]):
+            out[f"fired_x_l{i}"] = float(np.asarray(jnp.sum(lp["nx"])))
+            out[f"fired_h_l{i}"] = float(np.asarray(jnp.sum(lp["nh"])))
+    return out
+
+
+def fired_totals(counters: dict) -> tuple[list, list]:
+    """Per-layer ([fired_x...], [fired_h...]) lists from a harvested
+    counter dict (empty lists when the run was not delta-gated)."""
+    fx, fh = [], []
+    i = 0
+    while f"fired_x_l{i}" in counters:
+        fx.append(counters[f"fired_x_l{i}"])
+        fh.append(counters[f"fired_h_l{i}"])
+        i += 1
+    return fx, fh

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..obs import trace as obs_trace
 from ..training.train_loop import param_shardings
 from ..sharding import named_sharding
 from . import runtime
@@ -72,6 +73,7 @@ class ServeEngine:
                                 static_argnames=("max_len",))
         self._dprefills: dict = {}   # id(draft) → jitted draft prefill
 
+    @obs_trace.traced("engine.prepare")
     def prepare(self, params, pack: bool | None = None, calib=None):
         """Apply the engine's sparsity policy/plan to params. Prunes to the
         policy's patterns; when the model decodes through packed kernels
@@ -241,13 +243,18 @@ class ServeEngine:
                     "length-masked path — ragged lockstep serving needs "
                     "the `length` prefill parameter")
             lengths = jnp.asarray(lengths, jnp.int32)
-            logits, cache = self._prefill(params, tokens,
-                                          max_len=self.max_len,
-                                          extra=extra, length=lengths)
+            with obs_trace.span("engine.prefill", batch=tokens.shape[0],
+                                width=tokens.shape[1], ragged=True):
+                logits, cache = self._prefill(params, tokens,
+                                              max_len=self.max_len,
+                                              extra=extra, length=lengths)
             pos = lengths
         else:
-            logits, cache = self._prefill(params, tokens,
-                                          max_len=self.max_len, extra=extra)
+            with obs_trace.span("engine.prefill", batch=tokens.shape[0],
+                                width=tokens.shape[1], ragged=False):
+                logits, cache = self._prefill(params, tokens,
+                                              max_len=self.max_len,
+                                              extra=extra)
             pos = jnp.int32(tokens.shape[1])
         if draft is not None:
             from .sampling import sample_dist
@@ -268,9 +275,15 @@ class ServeEngine:
                 pos_v = jnp.full((tokens.shape[0],), tokens.shape[1],
                                  jnp.int32)
             probs = sample_dist(logits[:, -1], sampling)
-            toks, state = self._spec_loop(steps, spec_k, sampling, draft)(
-                params, draft.params, cache, dstate, probs, pos_v, rng)
+            with obs_trace.span("engine.spec_loop", steps=steps, k=spec_k):
+                toks, state = self._spec_loop(steps, spec_k, sampling,
+                                              draft)(params, draft.params,
+                                                     cache, dstate, probs,
+                                                     pos_v, rng)
             return (toks, state) if return_state else toks
-        toks, state = self._loop(steps, sampling)(params, cache, logits,
-                                                  pos, rng)
+        # the span covers compile+enqueue — decode itself is async; wall
+        # time to tokens is the caller's block_until_ready
+        with obs_trace.span("engine.decode_loop", steps=steps):
+            toks, state = self._loop(steps, sampling)(params, cache, logits,
+                                                      pos, rng)
         return (toks, state) if return_state else toks

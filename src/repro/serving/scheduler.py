@@ -45,6 +45,8 @@ import numpy as np
 
 from . import runtime
 from .sampling import SamplingConfig
+from ..obs import counters as obs_counters
+from ..obs import trace as obs_trace
 from ..traffic import (AdmissionQueue, DispatchQueue, QueuedRequest,
                        SlotInfo, SlotPool)
 
@@ -116,6 +118,13 @@ class ContinuousBatchingEngine:
       ``time.perf_counter``; tests inject virtual clocks).
     - ``on_token``: per-token streaming callback
       ``(uid, tokens: list[int], first: bool)`` invoked at harvest.
+    - ``counters``: thread the ``repro.obs`` on-device counter vector
+      (decode steps, emitted tokens, spec acceptance, delta fired-column
+      gauges) through every chunk dispatch. The vector rides the dispatch
+      queue next to each chunk's token future and is read at the chunk's
+      EXISTING harvest sync — zero extra device→host transfers, zero new
+      sync points. ``counters()`` returns the harvested dict. Off (the
+      default) compiles exactly the uninstrumented chunk function.
     - ``draft``: a ``repro.spec.DraftModel`` switches every decode chunk
       to speculative rounds (``spec_k`` proposals per round): each slot
       carries the draft's recurrent state alongside its cache rows, a
@@ -132,7 +141,7 @@ class ContinuousBatchingEngine:
                  bucket_prompts: bool = True, max_queue: int | None = None,
                  clock: Callable[[], float] | None = None,
                  on_token: Callable[[int, list, bool], None] | None = None,
-                 draft=None, spec_k: int = 4):
+                 draft=None, spec_k: int = 4, counters: bool = False):
         if not runtime.conforms(model):
             raise TypeError(
                 f"{type(model).__name__} does not implement the DecodeStep "
@@ -195,9 +204,20 @@ class ContinuousBatchingEngine:
         # chunk decodes) — the divisor for per-slot occupancy accounting
         self.slot_steps = np.zeros(slots, np.int64)
 
+        # ----- on-device observability counters (repro.obs): a small
+        # named vector chained across dispatches exactly like done/budget;
+        # disabled (None) keeps the jitted chunk fn byte-identical
+        self._counter_names = (obs_counters.counter_names(model)
+                               if counters else None)
+        self.counters_dev = (obs_counters.zeros(self._counter_names)
+                             if counters else None)
+        self._counters_host: dict | None = None
+
         self._prefill = jax.jit(model.prefill, static_argnames=("max_len",))
         self._join = jax.jit(self._join_impl, donate_argnums=(0, 1, 2, 3, 4))
-        self._chunk_fn = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._chunk_fn = jax.jit(
+            self._chunk_obs_impl if counters else self._chunk_impl,
+            donate_argnums=(1,))
         self._evict_fn = jax.jit(
             lambda done, s: done.at[s].set(True), donate_argnums=(0,))
 
@@ -217,8 +237,9 @@ class ContinuousBatchingEngine:
                                      static_argnames=("max_len",))
             self._join_spec = jax.jit(self._join_spec_impl,
                                       donate_argnums=(0, 1, 2, 3, 4, 5))
-            self._chunk_spec_fn = jax.jit(self._chunk_spec_impl,
-                                          donate_argnums=(2, 3))
+            self._chunk_spec_fn = jax.jit(
+                self._chunk_spec_obs_impl if counters
+                else self._chunk_spec_impl, donate_argnums=(2, 3))
 
     # ------------------------------------------------------------- device
     def _join_impl(self, cache, logits, pos, done, budget, pre_cache,
@@ -244,6 +265,16 @@ class ContinuousBatchingEngine:
         # budget lives on device so the next chunk can dispatch before
         # this one's tokens reach the host
         st["budget"] = jnp.maximum(budget - st["emitted"], 0)
+        return toks, st
+
+    def _chunk_obs_impl(self, params, cache, logits, pos, rng, done,
+                        budget, counters):
+        """The counter-threaded chunk: the plain chunk body plus in-graph
+        counter folds (pure extra adds — same dispatch, same sync)."""
+        toks, st = self._chunk_impl(params, cache, logits, pos, rng, done,
+                                    budget)
+        st["counters"] = obs_counters.chunk_update(
+            self._counter_names, counters, st, self.chunk)
         return toks, st
 
     def _join_spec_impl(self, cache, dstate, probs, pos, done, budget,
@@ -276,6 +307,14 @@ class ContinuousBatchingEngine:
             pos, rng, self.chunk, self.spec_k, self.sampling, done=done,
             budget=budget, limit=self.max_len)
         st["budget"] = jnp.maximum(budget - st["emitted"], 0)
+        return toks, st
+
+    def _chunk_spec_obs_impl(self, params, dparams, cache, dstate, probs,
+                             pos, rng, done, budget, counters):
+        toks, st = self._chunk_spec_impl(params, dparams, cache, dstate,
+                                         probs, pos, rng, done, budget)
+        st["counters"] = obs_counters.chunk_update(
+            self._counter_names, counters, st, self.chunk)
         return toks, st
 
     # -------------------------------------------------------------- admit
@@ -327,11 +366,15 @@ class ContinuousBatchingEngine:
         by prefill bucket, prefill (batched where exact), join."""
         events = [Finished(r.uid, np.zeros(0, np.int32), r.prompt_len,
                            "expired") for r in self._aq.expire(now)]
-        while self.pool.free_count and self._aq:
-            batch = self._aq.pop(min(self.pool.free_count,
-                                     self.prefill_batch))
-            for group in self._group(batch):
-                self._prefill_join(group, now)
+        if not (self.pool.free_count and self._aq):
+            return events
+        with obs_trace.span("sched.admit", queued=len(self._aq),
+                            free=self.pool.free_count):
+            while self.pool.free_count and self._aq:
+                batch = self._aq.pop(min(self.pool.free_count,
+                                         self.prefill_batch))
+                for group in self._group(batch):
+                    self._prefill_join(group, now)
         return events
 
     def _group(self, batch: list[QueuedRequest]):
@@ -412,27 +455,36 @@ class ContinuousBatchingEngine:
         """Enqueue one decode chunk on the chained device state. Returns
         immediately — tokens are a future harvested later."""
         owners = self.pool.owners()
-        if self.draft is not None:
-            toks, st = self._chunk_spec_fn(
-                self.params, self.draft.params, self.cache, self.dstate,
-                self.probs, self.pos, self.rng, self.done, self.budget)
-            self.cache, self.dstate = st["cache"], st["dstate"]
-            self.probs = st["probs"]
-            self._rounds = self._rounds + st["rounds"]
-            self._drafted = self._drafted + st["drafted"]
-            self._accepted = self._accepted + st["accepted"]
-        else:
-            toks, st = self._chunk_fn(self.params, self.cache, self.logits,
-                                      self.pos, self.rng, self.done,
-                                      self.budget)
-            self.cache, self.logits = st["cache"], st["logits"]
-        self.pos, self.rng = st["pos"], st["rng"]
-        self.done, self.budget = st["done"], st["budget"]
-        self.steps_dispatched += 1
-        # every slot steps through decode_step each chunk (done slots
-        # included — lockstep semantics), so all caches advance
-        self.slot_steps += self.chunk
-        self._dq.push(toks, owners)
+        obs = self._counter_names is not None
+        with obs_trace.span("sched.dispatch", seq=self.steps_dispatched,
+                            active=len(self._live)):
+            if self.draft is not None:
+                args = (self.params, self.draft.params, self.cache,
+                        self.dstate, self.probs, self.pos, self.rng,
+                        self.done, self.budget)
+                toks, st = self._chunk_spec_fn(
+                    *(args + (self.counters_dev,) if obs else args))
+                self.cache, self.dstate = st["cache"], st["dstate"]
+                self.probs = st["probs"]
+                self._rounds = self._rounds + st["rounds"]
+                self._drafted = self._drafted + st["drafted"]
+                self._accepted = self._accepted + st["accepted"]
+            else:
+                args = (self.params, self.cache, self.logits, self.pos,
+                        self.rng, self.done, self.budget)
+                toks, st = self._chunk_fn(
+                    *(args + (self.counters_dev,) if obs else args))
+                self.cache, self.logits = st["cache"], st["logits"]
+            if obs:
+                self.counters_dev = st["counters"]
+            self.pos, self.rng = st["pos"], st["rng"]
+            self.done, self.budget = st["done"], st["budget"]
+            self.steps_dispatched += 1
+            # every slot steps through decode_step each chunk (done slots
+            # included — lockstep semantics), so all caches advance
+            self.slot_steps += self.chunk
+            self._dq.push(toks, owners,
+                          counters=self.counters_dev if obs else None)
 
     def _harvest(self, now: float) -> list:
         """Sync the oldest in-flight chunk's tokens and account them to
@@ -440,7 +492,13 @@ class ContinuousBatchingEngine:
         inflight = self._dq.harvest()
         if inflight is None:
             return []
-        toks_np = np.asarray(inflight.tokens)   # the one host sync
+        with obs_trace.span("sched.harvest", seq=inflight.seq):
+            toks_np = np.asarray(inflight.tokens)   # the one host sync
+            if inflight.counters is not None:
+                # the chunk is host-materialized by the sync above; its
+                # counter snapshot reads out with no extra sync point
+                self._counters_host = obs_counters.harvest(
+                    self._counter_names, inflight.counters)
         events: list = []
         evictions: list[int] = []
         for slot, uid in enumerate(inflight.owners):
@@ -472,8 +530,9 @@ class ContinuousBatchingEngine:
                 evictions.append(info.slot)
                 events.append(self._finish(uid, "expired"))
         if evictions:
-            self.done = self._evict_fn(self.done,
-                                       jnp.asarray(evictions, jnp.int32))
+            with obs_trace.span("sched.evict", slots=len(evictions)):
+                self.done = self._evict_fn(
+                    self.done, jnp.asarray(evictions, jnp.int32))
         return events
 
     def _finish(self, uid: int, reason: str) -> Finished:
@@ -531,3 +590,18 @@ class ContinuousBatchingEngine:
         accepted = int(np.sum(np.asarray(self._accepted)))
         return dict(rounds=rounds, drafted=drafted, accepted=accepted,
                     acceptance_rate=accepted / max(drafted, 1))
+
+    def counters(self) -> dict | None:
+        """The harvested on-device counter dict (None when the engine was
+        built without ``counters=True``).
+
+        While chunks are in flight this returns the snapshot read at the
+        last harvest (no sync). Once the pipeline drains — the normal
+        read point, after ``run()`` — the chained vector's final value is
+        identical to the last harvested snapshot, and reading it forces
+        nothing new (every feeding dispatch already synced)."""
+        if self._counter_names is None:
+            return None
+        if self._dq and self._counters_host is not None:
+            return dict(self._counters_host)
+        return obs_counters.harvest(self._counter_names, self.counters_dev)

@@ -37,6 +37,9 @@ class InFlight:
     tokens: Any                 # (slots, chunk) device array (a future)
     owners: tuple               # slot → uid (None = idle) at dispatch time
     seq: int                    # dispatch sequence number
+    counters: Any = None        # obs counter vector snapshot (a future) —
+                                # rides the chunk so the host reads it at
+                                # the SAME sync that forces the tokens
 
 
 class DispatchQueue:
@@ -67,10 +70,10 @@ class DispatchQueue:
         """Whether another chunk should be enqueued before harvesting."""
         return len(self._q) < self.depth
 
-    def push(self, tokens, owners) -> InFlight:
+    def push(self, tokens, owners, counters=None) -> InFlight:
         if len(self._q) >= self.depth:
             raise RuntimeError(f"dispatch queue full (depth {self.depth})")
-        inf = InFlight(tokens, tuple(owners), self._seq)
+        inf = InFlight(tokens, tuple(owners), self._seq, counters)
         self._seq += 1
         self._q.append(inf)
         return inf

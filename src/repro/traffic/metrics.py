@@ -62,6 +62,14 @@ def percentile(xs, q: float) -> float:
     return float(np.percentile(xs, q))
 
 
+def _pct_ms(xs, q: float) -> float | None:
+    """Percentile in ms, or None on empty input — summaries land in JSON
+    benchmark records, and NaN is not valid JSON (json.dump with
+    allow_nan=False rejects it; other parsers read a corrupt file)."""
+    p = percentile(xs, q)
+    return None if np.isnan(p) else round(p * 1e3, 3)
+
+
 def summarize(records, wall: float, offered_rps: float | None = None) -> dict:
     """Reduce request records to the serving curve's figures.
 
@@ -82,11 +90,11 @@ def summarize(records, wall: float, offered_rps: float | None = None) -> dict:
         "rejected": sum(r.reason == "rejected" for r in recs),
         "tokens": total_tokens,
         "wall_s": round(float(wall), 6),
-        "p50_ttft_ms": round(percentile(ttfts, 50) * 1e3, 3),
-        "p90_ttft_ms": round(percentile(ttfts, 90) * 1e3, 3),
-        "p99_ttft_ms": round(percentile(ttfts, 99) * 1e3, 3),
-        "p50_tpot_ms": round(percentile(tpots, 50) * 1e3, 3),
-        "p99_tpot_ms": round(percentile(tpots, 99) * 1e3, 3),
+        "p50_ttft_ms": _pct_ms(ttfts, 50),
+        "p90_ttft_ms": _pct_ms(ttfts, 90),
+        "p99_ttft_ms": _pct_ms(ttfts, 99),
+        "p50_tpot_ms": _pct_ms(tpots, 50),
+        "p99_tpot_ms": _pct_ms(tpots, 99),
         "toks_per_s": round(total_tokens / wall, 1) if wall > 0 else 0.0,
         "goodput_tps": round(good_tokens / wall, 1) if wall > 0 else 0.0,
     }
